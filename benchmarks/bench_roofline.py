@@ -1,0 +1,74 @@
+"""§Roofline: the 40-cell (arch x shape) table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by launch/dryrun.py) and emits, per
+cell: the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO
+usefulness, and the kernel-substituted memory term."""
+
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../artifacts/dryrun")
+
+
+def load_cells(mesh: str = "pod16x16") -> list[dict]:
+    cells = []
+    if not os.path.isdir(ARTIFACTS):
+        return cells
+    for name in sorted(os.listdir(ARTIFACTS)):
+        if name.endswith(f"__{mesh}.json"):
+            with open(os.path.join(ARTIFACTS, name)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+def rows(mesh: str = "pod16x16") -> list[tuple[str, float, str]]:
+    out = []
+    for c in load_cells(mesh):
+        cell = f"{c['arch']}/{c['shape']}"
+        if c.get("status") == "skip":
+            out.append((f"roofline/{cell}/skipped", 1.0, c["skip_reason"][:80]))
+            continue
+        if c.get("status") != "ok":
+            out.append((f"roofline/{cell}/ERROR", 0.0, c.get("error", "?")[:80]))
+            continue
+        dom = c["dominant"]
+        ks = c.get("kernel_substitution", {})
+        out.append((
+            f"roofline/{cell}/{dom}", c[dom],
+            f"compute={c['compute_s']:.3f}s mem={c['memory_s']:.3f}s "
+            f"coll={c['collective_s']:.3f}s useful={c['useful_flops_ratio']:.2f} "
+            f"mem_kernelsub={ks.get('memory_s', float('nan')):.3f}s"))
+    return out
+
+
+def summary(mesh: str = "pod16x16") -> dict:
+    cells = [c for c in load_cells(mesh) if c.get("status") == "ok"]
+    if not cells:
+        return {}
+    worst = min(cells, key=lambda c: c["useful_flops_ratio"])
+    most_coll = max(cells, key=lambda c: c["collective_s"] /
+                    max(1e-12, c["compute_s"] + c["memory_s"] + c["collective_s"]))
+    return {"n_ok": len(cells), "worst_useful": f"{worst['arch']}/{worst['shape']}",
+            "most_collective_bound": f"{most_coll['arch']}/{most_coll['shape']}"}
+
+
+def run() -> list[str]:
+    lines = [f"roofline/{n.split('/',1)[1]},{v:.4f},{d}" for n, v, d in rows()]
+    s = summary()
+    if s:
+        lines.append(f"roofline/summary,{s['n_ok']},worst={s['worst_useful']} "
+                     f"most_collective={s['most_collective_bound']}")
+    # multi-pod pass/fail count
+    mp = [c for c in load_cells("pod2x16x16")]
+    ok = sum(1 for c in mp if c.get("status") == "ok")
+    skip = sum(1 for c in mp if c.get("status") == "skip")
+    err = sum(1 for c in mp if c.get("status") == "error")
+    if mp:
+        lines.append(f"roofline/multipod_cells,{ok},ok={ok} skip={skip} err={err}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,32 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_bridge, bench_serving, bench_loader, bench_offload,
+                   bench_fabric, bench_roofline)
+    modules = [
+        ("bridge (SS4.1-4.3)", bench_bridge),
+        ("serving (SS5.1-5.5)", bench_serving),
+        ("loader (SS6.1)", bench_loader),
+        ("offload (SS6.2)", bench_offload),
+        ("fabric (SS7)", bench_fabric),
+        ("roofline (SSRoofline)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, mod in modules:
+        print(f"# --- {title} ---")
+        try:
+            for line in mod.run():
+                print(line)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

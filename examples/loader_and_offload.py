@@ -1,0 +1,57 @@
+"""CC-aware movement engineering demo (paper §6): the loader ladder on a
+real (small) sharded checkpoint + the reuse-aware offload policy.
+
+    PYTHONPATH=src python examples/loader_and_offload.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.core.bridge import B300, BridgeModel
+from repro.core.gateway import TransferGateway
+from repro.core.policy import OffloadPolicy, cc_aware_defaults
+from repro.loader.pooled_loader import LoaderVariant, PooledLoader
+from repro.loader.sharded_weights import ShardedCheckpoint, save_sharded
+from repro.serving.offload import OffloadManager, churn_workload
+
+GIB = 1 << 30
+
+print("=" * 72)
+print("1. Context-pooled loader (GPT-OSS-120B cost model + real small load)")
+print("=" * 72)
+loader = PooledLoader(BridgeModel(B300, cc_on=True), n_workers=8)
+print(f"{'variant':18s} {'modeled 59GiB':>14s}   components")
+for v in LoaderVariant:
+    t = loader.modeled_load_time(59 * GIB, 15, v)
+    comps = " ".join(f"{k}={t[k]:.1f}" for k in
+                     ("stage", "transfer", "lifecycle", "assemble") if t[k] > 0.05)
+    print(f"{v.value:18s} {t['total']:12.2f} s   {comps}")
+
+with tempfile.TemporaryDirectory() as d:
+    tensors = {f"layer{i}.w": np.random.default_rng(i).standard_normal(
+        (64, 64)).astype(np.float32) for i in range(8)}
+    save_sharded(d + "/ckpt", tensors, n_shards=4)
+    ckpt = ShardedCheckpoint(d + "/ckpt")
+    loaded, _ = loader.load(ckpt, LoaderVariant.PREWARMED)
+    ok = all(np.array_equal(np.asarray(loaded[k]), v) for k, v in tensors.items())
+    print(f"\nreal load through the prewarmed pool: {len(loaded)} tensors, "
+          f"bit-exact={ok}")
+
+print()
+print("=" * 72)
+print("2. Reuse-aware KV offload (store_threshold=2) under churn")
+print("=" * 72)
+shape = dict(n_requests=8, prefix_blocks=36, unique_blocks=4600,
+             block_bytes=64 * 1024, churn=3)
+for policy in (OffloadPolicy.SPILL_ALL, OffloadPolicy.REUSE_AWARE,
+               OffloadPolicy.NO_OFFLOAD):
+    gw = TransferGateway(BridgeModel(B300, cc_on=True), cc_aware_defaults(True),
+                         pool_workers=8)
+    mgr = OffloadManager(gw, policy, store_threshold=2)
+    st = churn_workload(mgr, **shape)
+    print(f"{policy.value:12s} spilled={st.spilled_bytes/2**20:9.1f} MiB "
+          f"({st.spilled_blocks} blocks)  skipped={st.skipped_blocks}  "
+          f"restored={st.restored_bytes/2**20:.1f} MiB  "
+          f"bridge_time={gw.stats.bridge_time_s:.3f}s")
+print("\n-> evidence-driven offload: ~1000x less spill for the same reuse.")

@@ -1,0 +1,64 @@
+"""Serve a small model with batched requests under every scheduling policy x
+CC mode, reproducing the §5.4 decision table with the real engine.
+
+    PYTHONPATH=src python examples/serve_cc_policies.py [--arch hymba-1.5b]
+
+This is the end-to-end serving driver for the paper's kind of system:
+continuous batching, prefill+decode, bridge-costed crossings, CC-aware
+policy selection.
+"""
+
+import argparse
+
+import jax
+
+from repro.configs.base import ARCH_IDS, all_configs, smoke_config
+from repro.core.policy import SchedulingPolicy as SP
+from repro.models.model import Model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import Scheduler
+
+
+def run_cell(model, policy, cc_on, n_requests=10):
+    eng = ServingEngine(model, max_batch=4, max_len=96, policy=policy,
+                        cc_on=cc_on, seed=42)
+    sched = Scheduler(eng)
+    key = jax.random.PRNGKey(1)
+    for i in range(n_requests):
+        key, k = jax.random.split(key)
+        prompt = list(map(int, jax.random.randint(k, (6,), 1,
+                                                  model.cfg.vocab_size)))
+        sched.submit(Request(f"r{i}", prompt=prompt,
+                             sampling=SamplingParams(max_new_tokens=10)))
+    stats = sched.run()
+    eng.close()
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="olmo-1b")
+    args = ap.parse_args()
+    model = Model(smoke_config(all_configs()[args.arch]))
+
+    print(f"{'policy':9s} {'cc':4s} {'bridge_ms':>10s} {'crossings':>10s} "
+          f"{'tokens':>7s} {'ttft_ms':>8s}")
+    results = {}
+    for cc in (False, True):
+        for policy in (SP.ASYNC_OVERLAP, SP.SYNC_DRAIN, SP.WORKER_DRAIN):
+            st = run_cell(model, policy, cc)
+            results[(policy, cc)] = st
+            print(f"{policy.value:9s} {'on' if cc else 'off':4s} "
+                  f"{st['bridge_time_s']*1e3:10.2f} {st['crossings']:10d} "
+                  f"{st['total_tokens']:7d} {st['mean_ttft_s']*1e3:8.2f}")
+
+    on_async = results[(SP.ASYNC_OVERLAP, True)]["bridge_time_s"]
+    on_sync = results[(SP.SYNC_DRAIN, True)]["bridge_time_s"]
+    print(f"\nCC-on: the sync flag removes "
+          f"{100*(1-on_sync/on_async):.0f}% of bridge time — the engine-level "
+          f"form of the paper's one-flag recovery.")
+
+
+if __name__ == "__main__":
+    main()

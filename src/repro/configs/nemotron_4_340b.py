@@ -1,0 +1,25 @@
+"""nemotron-4-340b [dense]: 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000 — GQA, squared-ReLU [arXiv:2402.16819].
+
+The largest assigned cell: FSDP + sequence-sharded activations are required
+for the train_4k shape to approach fitting (see EXPERIMENTS.md §Dry-run for
+the measured per-device bytes).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp_kind="squared_relu",
+    rope=True,
+    fsdp=True,
+    seq_shard_activations=True,
+    remat_policy="nothing",
+))

@@ -1,0 +1,149 @@
+"""Scheduling policies and CC-mode-aware defaults (paper §5, §8 rule 3).
+
+The paper's central serving result is *policy inversion*: vLLM's default
+async scheduling — overlap step N's device-to-host output drain with step
+N+1's preparation — saves ~3 ms/step without CC and costs ~4 ms/step with it,
+because the overlapped copies serialize anyway (bridge law L1/L2) while the
+stream-arbitration overhead remains.
+
+This module defines the policy vocabulary used across the engine, the
+simulator and the benchmarks, and the CC-aware default selection the paper
+says belongs in the runtime ("Runtimes should detect GPU-CC mode and flip
+scheduling, offload, and streaming defaults accordingly").
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .bridge import BridgeModel, BridgeProfile
+
+
+class SchedulingPolicy(enum.Enum):
+    #: vLLM default: overlap step-N output drain with step-N+1 prep on extra
+    #: CUDA streams.  Optimal CC-off; *inverted* (harmful) CC-on.
+    ASYNC_OVERLAP = "async"
+    #: --no-async-scheduling: forward, sample, one small D2H, drain, continue.
+    #: The drained, sequential pattern the secure bridge is engineered for.
+    SYNC_DRAIN = "sync"
+    #: v10c: keep async structure but move the *blocking* drain to a worker
+    #: thread.  A blocked crossing releases the GIL, so the engine thread
+    #: pipelines host work while the worker sits in the driver.
+    WORKER_DRAIN = "worker"
+
+
+class OffloadPolicy(enum.Enum):
+    #: default vLLM CPU-offload: spill every evicted block (2.3 GiB measured)
+    SPILL_ALL = "spill_all"
+    #: reuse-aware: offload only blocks observed >= store_threshold times
+    #: (2.3 MB measured; 2.97x warm-TTFT improvement CC-on)
+    REUSE_AWARE = "reuse_aware"
+    #: residency-first: never offload (buy residency — §8 rule 4)
+    NO_OFFLOAD = "no_offload"
+
+
+@dataclass(frozen=True)
+class RuntimeDefaults:
+    """Policy defaults the runtime should select for a given CC mode."""
+
+    scheduling: SchedulingPolicy
+    offload: OffloadPolicy
+    store_threshold: int
+    #: loader worker contexts (0 = single-context default path)
+    loader_pool_workers: int
+    loader_prewarm: bool
+    #: batch small per-step crossings into one staged crossing (§8 rule 1)
+    batch_small_crossings: bool
+
+
+def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,
+                      concurrency: Optional[int] = None) -> RuntimeDefaults:
+    """The paper's §8 checklist as a runtime default table.
+
+    CC-off: the classic overlap-everything defaults are correct.
+    CC-on : flip scheduling (inversion), make offload evidence-driven, pool
+            loader contexts, and batch small crossings.
+
+    Beyond-paper refinement: WORKER_DRAIN's per-step wake overhead only
+    amortizes at high concurrency (its measured win is at c=512; at c=128 it
+    barely beats sync), so the default is concurrency-aware — SYNC_DRAIN
+    below 256 concurrent sequences, WORKER_DRAIN above.  `allow_worker_drain`
+    gates the qualified v10c patch entirely; the conservative default is the
+    fully-reproduced one-flag fix (SYNC_DRAIN).
+    """
+    if not cc_on:
+        return RuntimeDefaults(
+            scheduling=SchedulingPolicy.ASYNC_OVERLAP,
+            offload=OffloadPolicy.SPILL_ALL,
+            store_threshold=0,
+            loader_pool_workers=0,
+            loader_prewarm=False,
+            batch_small_crossings=False,
+        )
+    use_worker = allow_worker_drain and (concurrency is None or concurrency >= 256)
+    return RuntimeDefaults(
+        scheduling=(SchedulingPolicy.WORKER_DRAIN if use_worker
+                    else SchedulingPolicy.SYNC_DRAIN),
+        offload=OffloadPolicy.REUSE_AWARE,
+        store_threshold=2,
+        loader_pool_workers=8,
+        loader_prewarm=True,
+        batch_small_crossings=True,
+    )
+
+
+@dataclass
+class PolicyOutcome:
+    """One (policy, cc_mode) measurement used by the inversion detector."""
+
+    policy: SchedulingPolicy
+    cc_on: bool
+    tokens_per_s: float
+
+
+def detect_inversion(outcomes: list[PolicyOutcome]) -> dict[str, object]:
+    """Detect policy inversion from measured/simulated outcomes.
+
+    Inversion (the Blackwell result): the policy ordering flips with CC —
+    async > sync CC-off but async < sync CC-on.  Neutralization (the Hopper
+    boundary result): async's benefit disappears but does not become a loss.
+    """
+
+    def best(cc_on: bool) -> Optional[PolicyOutcome]:
+        cands = [o for o in outcomes if o.cc_on is cc_on]
+        return max(cands, key=lambda o: o.tokens_per_s) if cands else None
+
+    def get(policy: SchedulingPolicy, cc_on: bool) -> Optional[PolicyOutcome]:
+        for o in outcomes:
+            if o.policy is policy and o.cc_on is cc_on:
+                return o
+        return None
+
+    a_off, s_off = get(SchedulingPolicy.ASYNC_OVERLAP, False), get(SchedulingPolicy.SYNC_DRAIN, False)
+    a_on, s_on = get(SchedulingPolicy.ASYNC_OVERLAP, True), get(SchedulingPolicy.SYNC_DRAIN, True)
+    if None in (a_off, s_off, a_on, s_on):
+        raise ValueError("need async/sync outcomes for both CC modes")
+
+    async_gain_off = (a_off.tokens_per_s - s_off.tokens_per_s) / s_off.tokens_per_s
+    async_gain_on = (a_on.tokens_per_s - s_on.tokens_per_s) / s_on.tokens_per_s
+    # classification thresholds: 1% band counts as a tie (paper's H200 case)
+    inverted = async_gain_off > 0.01 and async_gain_on < -0.01
+    neutralized = async_gain_off > 0.01 and abs(async_gain_on) <= 0.01
+    return {
+        "async_gain_cc_off": async_gain_off,
+        "async_gain_cc_on": async_gain_on,
+        "inverted": inverted,
+        "neutralized": neutralized,
+        "best_cc_off": best(False).policy,
+        "best_cc_on": best(True).policy,
+    }
+
+
+def recovered_fraction(cc_default: float, cc_fixed: float, gold: float) -> float:
+    """Fraction of the CC gap a fix recovers: (fixed - default) / (gold - default)."""
+    gap = gold - cc_default
+    if gap <= 0:
+        return 1.0
+    return (cc_fixed - cc_default) / gap

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Numerically exact (f32) causal/windowed multi-head attention with GQA
+(n_q_heads a multiple of n_kv_heads).  The kernel must match this to
+bf16-appropriate tolerance over the shape/dtype sweep in tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    denom = jnp.maximum(p.sum(axis=-1), 1e-30)
+    return (out / denom.transpose(0, 2, 1)[..., None]).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the chunked mLSTM kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .mlstm_scan import mlstm_scan_kernel
+from .ref import mlstm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force_kernel"))
+def mlstm_scan(q, k, v, log_i, log_f, *, chunk: int = 128,
+               force_kernel: bool = False):
+    """q,k: (B,S,H,dk) pre-scaled; v: (B,S,H,dv); log gates (B,S,H)."""
+    if _on_tpu() or force_kernel:
+        return mlstm_scan_kernel(q, k, v, log_i, log_f, chunk=chunk,
+                                 interpret=not _on_tpu())
+    return mlstm_ref(q, k, v, log_i, log_f)[0]

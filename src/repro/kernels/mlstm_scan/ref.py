@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the chunked mLSTM kernel: the *sequential* recurrence
+(one timestep at a time, stabilized exponential gating).  Deliberately
+independent of the chunked reformulation so it checks the math, not the
+implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def mlstm_ref(q, k, v, log_i, log_f, *, initial_state=None):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_i/log_f: (B,S,H).
+    Returns (y: (B,S,H,dv), state (C,n,m)).  q is assumed pre-scaled."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        C0 = jnp.zeros((b, h, dk, dv), F32)
+        n0 = jnp.zeros((b, h, dk), F32)
+        m0 = jnp.full((b, h), -1e30, F32)
+    else:
+        C0, n0, m0 = initial_state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs
+        m_new = jnp.maximum(lf + m, li)
+        fw = jnp.exp(lf + m - m_new)
+        iw = jnp.exp(li - m_new)
+        C = C * fw[..., None, None] + iw[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = n * fw[..., None] + iw[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_new))
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(t.astype(F32), 1, 0) for t in (q, k, v, log_i, log_f))
+    (C, n, m), ys = lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), (C, n, m)

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the paged-attention decode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .paged_attention import paged_attention_kernel
+from .ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("force_kernel",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    force_kernel: bool = False):
+    """q: (B, H, D); pages: (P, page, KV, D); block_tables (B, pages_max);
+    lengths (B,).  Returns (B, H, D)."""
+    if _on_tpu() or force_kernel:
+        return paged_attention_kernel(
+            q, k_pages, v_pages, block_tables, lengths,
+            interpret=not _on_tpu())
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Gathers each sequence's pages into a contiguous KV view, then runs masked
+single-token attention.  Exact (f32) — the kernel must match to dtype
+tolerance across the page/shape sweep.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q: (B, H, D); k_pages/v_pages: (P, page, KV, D);
+    block_tables: (B, pages_max) int32; lengths: (B,) int32.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    pages_max = block_tables.shape[1]
+    page = k_pages.shape[1]
+    kv = k_pages.shape[2]
+    rep = h // kv
+
+    k_seq = k_pages[block_tables]          # (B, pages_max, page, KV, D)
+    v_seq = v_pages[block_tables]
+    k_seq = k_seq.reshape(b, pages_max * page, kv, d)
+    v_seq = v_seq.reshape(b, pages_max * page, kv, d)
+    k_seq = jnp.repeat(k_seq, rep, axis=2)
+    v_seq = jnp.repeat(v_seq, rep, axis=2)
+
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        k_seq.astype(jnp.float32)) * scale
+    pos = jnp.arange(pages_max * page)[None, :]
+    mask = pos < lengths[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v_seq.astype(jnp.float32))
+    return (out / jnp.maximum(p.sum(-1), 1e-30)[..., None]).astype(q.dtype)

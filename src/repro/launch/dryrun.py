@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first statements in this module — jax locks
+the device count at first init, and the production meshes need 512 host
+placeholder devices.  Everything else (smoke tests, benches) must see 1.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-check]
+
+Per cell this produces artifacts/dryrun/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (per-device bytes), cost_analysis (flops / bytes accessed),
+  collective bytes by op kind (parsed from the post-SPMD HLO), and the
+  derived three-term roofline (§Roofline).
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (SHAPES, ARCH_IDS, InputShape, ModelConfig,
+                                get_config, shape_applicable)
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch import specs as specs_lib
+from repro.models import model as model_lib
+from repro.models.layers import Param, is_param, set_activation_resolver
+from repro.models.shardings import ShardingRules
+from repro.training.optimizer import AdamWConfig, param_values
+from repro.training.train_loop import make_train_step
+
+from repro.launch import hlo_analysis
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+# TPU v5e hardware constants (assignment §Roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def _sds_tree(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def pallas_kernel_bytes(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    """Analytic per-device HBM bytes of the Pallas kernels that replace the
+    marked jnp reference regions (kernels keep logits/decay tiles in VMEM and
+    touch HBM only for Q/K/V/O + states).
+
+    Used for the kernel-substituted memory term: the jnp reference
+    materializes O(S x block) intermediates to HBM that the TPU kernels never
+    write.  train: fwd + recompute + backward ~ 4x forward traffic.
+    """
+    from repro.models.shardings import ShardingRules
+    rules = ShardingRules(cfg, mesh)
+    model_n = mesh.shape["model"]
+    data_n = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    B, S = shape.global_batch, shape.seq_len
+    b_loc = max(1, B // data_n) if B % data_n == 0 else B
+    dt = 2  # bf16
+
+    h_loc = cfg.n_heads // model_n if rules.param_rules["heads"] == "model" else cfg.n_heads
+    kv_loc = cfg.n_kv_heads // model_n if rules.param_rules["kv_heads"] == "model" else cfg.n_kv_heads
+    D = cfg.head_dim
+    passes = 4 if shape.kind == "train" else 1
+    out: dict = {}
+
+    if cfg.family != "ssm" and shape.kind != "decode":
+        # flash attention: Q + O (h_loc) and K + V (kv_loc), per layer
+        per_layer = (2 * b_loc * S * h_loc * D + 2 * b_loc * S * kv_loc * D) * dt
+        n_attn = cfg.n_layers + cfg.encoder_layers
+        out["flash_attention"] = passes * n_attn * per_layer
+    if shape.kind == "decode" and cfg.family != "ssm":
+        # paged decode: read the (seq-sharded) cache once + q/o
+        seq_loc = S // model_n if S % model_n == 0 else S
+        if cfg.use_mla:
+            cache = b_loc * seq_loc * (cfg.kv_lora_rank + cfg.rope_head_dim) * dt
+        else:
+            cache = 2 * b_loc * seq_loc * cfg.n_kv_heads * D * dt
+        n_full = len(cfg.global_layers) if cfg.sliding_window else cfg.n_layers
+        n_win = cfg.n_layers - n_full if cfg.sliding_window else 0
+        win_cache = 2 * b_loc * min(cfg.sliding_window or S, S) * cfg.n_kv_heads * D * dt
+        out["paged_attention"] = n_full * cache + n_win * win_cache
+    if cfg.ssm_kind:
+        inner = cfg.ssm_expand * cfg.d_model
+        inner_loc = inner // model_n if rules.param_rules["mlp"] == "model" else inner
+        per_layer = 8 * b_loc * max(S if shape.kind != "decode" else 1, 1) * inner_loc * dt
+        n_ssm = cfg.n_layers if cfg.family == "ssm" else cfg.n_layers  # hybrid: every layer
+        key = "mlstm_scan" if cfg.ssm_kind == "xlstm" else "ssd_scan"
+        out[key] = passes * n_ssm * per_layer
+    return out
+
+
+def build_cell(cfg: ModelConfig, shape: InputShape, mesh):
+    """Returns (fn, kwargs-of-ShapeDtypeStructs) to lower for this cell."""
+    from repro.launch.mesh import data_axis_names
+    from repro.models.layers import set_moe_mesh
+    rules = ShardingRules(cfg, mesh)
+    set_activation_resolver(rules.resolver())
+    set_moe_mesh(mesh, data_axis_names(mesh), "model")
+
+    p_abstract = jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg))
+    p_shardings = rules.params_shardings(p_abstract)
+    p_sds = jax.tree.map(
+        lambda p, s: Param(jax.ShapeDtypeStruct(p.value.shape, p.value.dtype,
+                                                sharding=s.value), p.axes),
+        p_abstract, p_shardings, is_leaf=is_param)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        from repro.training.train_loop import init_train_state
+        o_abstract = jax.eval_shape(lambda: init_train_state(p_abstract, opt_cfg))
+        v_shard = param_values(p_shardings)
+        o_sds = {
+            "mu": jax.tree.map(lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+                               o_abstract["mu"], v_shard),
+            "nu": jax.tree.map(lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+                               o_abstract["nu"], v_shard),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        batch_sds = specs_lib.train_input_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, opt_cfg, grad_shardings=v_shard)
+        return step, (p_sds, o_sds, batch_sds)
+
+    if shape.kind == "prefill":
+        batch_sds = specs_lib.prefill_input_specs(cfg, shape, mesh)
+
+        def prefill_step(params, batch):
+            logits, caches, _ = model_lib.prefill(params, cfg, batch,
+                                                  max_len=shape.seq_len)
+            return logits, caches
+        return prefill_step, (p_sds, batch_sds)
+
+    # decode: one new token against a seq_len KV cache
+    d = specs_lib.decode_input_specs(cfg, shape, mesh)
+
+    def serve_step(params, caches, tokens, index):
+        return model_lib.decode_step(params, cfg, caches, tokens, index)
+    return serve_step, (p_sds, d["caches"], d["tokens"], d["index"])
+
+
+def analyse(compiled, lowered, mesh, cfg, shape) -> dict:
+    chips = mesh_chip_count(mesh)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # scan-aware analysis (XLA's counts miss while-loop trip counts)
+    hlo = compiled.as_text()
+    own = hlo_analysis.analyze(hlo)
+    flops = float(own["flops"])
+    bytes_accessed = float(own["bytes_accessed"])
+    bytes_no_copy = float(own["bytes_accessed_no_copy"])
+    coll = own["collectives"]
+    trips = own["trip_counts"]
+
+    mem = {}
+    ma = compiled.memory_analysis()
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            mem[attr] = int(getattr(ma, attr))
+        except Exception:
+            pass
+
+    # the post-SPMD module is per-device: terms are per-chip seconds
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    memory_s_no_copy = bytes_no_copy / HBM_BW
+    collective_s = coll["total_bytes"] / LINK_BW
+
+    # kernel-substituted memory term: swap the marked jnp reference regions'
+    # HBM traffic for the Pallas kernels' analytic profile
+    marked = own.get("marked_bytes", {})
+    kernel = pallas_kernel_bytes(cfg, shape, mesh)
+    sub_bytes = max(0.0, bytes_accessed - sum(marked.values())) + sum(kernel.values())
+    kernel_sub = {
+        "marked_bytes": marked,
+        "kernel_bytes": kernel,
+        "bytes_substituted": sub_bytes,
+        "memory_s": sub_bytes / HBM_BW,
+    }
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "chips": chips,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "hlo_bytes_no_copy_per_device": bytes_no_copy,
+        "memory_s_no_copy": memory_s_no_copy,
+        "xla_cost_analysis": {"flops": xla_flops, "bytes_accessed": xla_bytes},
+        "collectives": coll,
+        "scan_trip_counts": trips,
+        "memory_analysis": mem,
+        "kernel_substitution": kernel_sub,
+        **terms,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / chips,
+        "useful_flops_ratio": (model_flops / chips) / flops if flops else 0.0,
+        "params_total": n_params,
+        "params_active": n_active,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, force: bool = False,
+             out_dir: str = ARTIFACT_DIR, tag: str = "",
+             overrides: dict = None, donate_cache: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{tag}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "applicable": ok, "skip_reason": why, "status": "skip"}
+    if ok:
+        t0 = time.time()
+        try:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            fn, args = build_cell(cfg, shape, mesh)
+            donate = (1,) if (donate_cache and shape.kind == "decode") else ()
+            with mesh:
+                lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+                record.update(analyse(compiled, lowered, mesh, cfg, shape))
+            record.update(status="ok", lower_s=round(t_lower, 1),
+                          compile_s=round(t_compile, 1))
+            print(compiled.memory_analysis())
+        except Exception as e:
+            record.update(status="error", error=f"{type(e).__name__}: {e}",
+                          traceback=traceback.format_exc()[-4000:])
+        finally:
+            set_activation_resolver(None)
+            from repro.models.layers import set_moe_mesh
+            set_moe_mesh(None, (), None)
+
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb knob)")
+    ap.add_argument("--donate-cache", action="store_true",
+                    help="alias decode caches (in-place KV update)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.lstrip("-").isdigit() else v)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            if arch == "qwen3p6-27b":
+                continue  # paper workload: serving benches cover it
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod, force=args.force,
+                       tag=args.tag, overrides=overrides,
+                       donate_cache=args.donate_cache)
+        status = rec.get("status")
+        line = f"{arch:22s} {shape:12s} {rec['mesh']:10s} {status}"
+        if status == "ok":
+            line += (f"  dominant={rec['dominant']:<12s}"
+                     f" compute={rec['compute_s']:.4f}s mem={rec['memory_s']:.4f}s"
+                     f" coll={rec['collective_s']:.4f}s useful={rec['useful_flops_ratio']:.2f}")
+        elif status == "error":
+            line += f"  {rec['error'][:120]}"
+        else:
+            line += f"  ({rec['skip_reason'][:60]})"
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Elastic rescale: remap a checkpoint trained on one mesh onto another.
+
+    PYTHONPATH=src python -m repro.launch.elastic --ckpt-dir /tmp/ck \
+        --arch olmo-1b --from-mesh 16x16 --to-mesh 8x8
+
+Leaves are stored unsharded (training/checkpoint.py), so resharding is
+placement: rebuild the target ShardingRules for the new mesh, device_put each
+leaf with its new sharding, save back.  This is the scheduler-facing piece of
+fault tolerance: a 512-chip job resumes on 256 chips (or a debug host) with
+no format conversion.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.model import init_params
+from repro.models.shardings import ShardingRules
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import param_values
+
+
+def parse_mesh(spec: str):
+    dims = tuple(int(x) for x in spec.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    return jax.make_mesh(dims, axes)
+
+
+def reshard(ckpt_dir: str, arch: str, to_mesh) -> dict:
+    """Restore the newest checkpoint and re-place it for `to_mesh`."""
+    cfg = get_config(arch)
+    abstract = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    rules = ShardingRules(cfg, to_mesh)
+    shardings = rules.params_shardings(abstract)
+
+    # template with target shardings so restore places leaves directly
+    from repro.models.layers import Param, is_param
+    template = jax.tree.map(
+        lambda a, s: Param(jax.ShapeDtypeStruct(a.value.shape, a.value.dtype,
+                                                sharding=s.value), a.axes),
+        abstract, shardings, is_leaf=is_param)
+    params, opt, step = ckpt.restore(ckpt_dir, ckpt.committed_steps(ckpt_dir)[-1],
+                                     template)
+    return {"params": params, "opt": opt, "step": step,
+            "mesh": dict(to_mesh.shape)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--to-mesh", default="1x1",
+                    help="e.g. 16x16 or 2x16x16 (needs the dry-run's "
+                         "XLA_FLAGS for >1 host device)")
+    args = ap.parse_args()
+    mesh = parse_mesh(args.to_mesh)
+    out = reshard(args.ckpt_dir, args.arch, mesh)
+    n = sum(v.size for v in jax.tree.leaves(param_values(out["params"])))
+    print(f"resharded step {out['step']} ({n/1e6:.1f}M params) onto {out['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,429 @@
+"""Scan-aware HLO cost analysis.
+
+XLA's built-in `compiled.cost_analysis()` counts a while-loop body ONCE —
+with scan-over-layers (our default for depth-independent compile times) that
+under-reports flops/bytes/collectives by the layer count.  This module walks
+the post-optimization HLO text, builds per-computation symbol tables (operand
+shapes are not inlined on every backend), recovers while-loop trip counts
+from their condition computations, and accumulates:
+
+  * flops            — dot/convolution ops (2 * prod(result) * prod(lhs
+                       contracting dims)), recursing into fusions/calls,
+                       x trip inside loop bodies
+  * bytes accessed   — per top-level op: result + operand bytes (fusion
+                       internals excluded: a fusion touches HBM only at its
+                       boundary — the same model XLA uses), x trip in loops
+  * collective bytes — result-shape bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       x trip in loops, per-kind breakdown
+
+Validated against analytic counts in tests/test_hlo_analysis.py (a scanned
+matmul must report length x one-matmul flops, etc.).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+DTYPE_BYTES = {"f64": 8, "c64": 8, "c128": 16, "f32": 4, "f16": 2, "bf16": 2,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+               "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|branch_computations)=[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(segment: str) -> tuple[int, int]:
+    """(total elements, total bytes) over all typed shapes in the segment."""
+    elems_total, bytes_total = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * DTYPE_BYTES[dtype]
+    return elems_total, bytes_total
+
+
+def _first_shape(segment: str) -> Optional[tuple[str, tuple[int, ...]]]:
+    m = _SHAPE_RE.search(segment)
+    if not m or m.group(1) not in DTYPE_BYTES:
+        return None
+    return m.group(1), tuple(int(d) for d in m.group(2).split(",") if d.strip())
+
+
+@dataclass
+class Op:
+    name: str
+    result_seg: str
+    opcode: str
+    rest: str          # everything after 'opcode('
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_elems_bytes(self.result_seg)[1]
+
+    @property
+    def operand_seg(self) -> str:
+        return self.rest.split(")")[0]
+
+    def operand_names(self) -> list[str]:
+        return _OPERAND_RE.findall(self.operand_seg)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    table: dict = field(default_factory=dict)   # op name -> Op
+
+
+def parse_computations(hlo: str) -> dict[str, "Computation"]:
+    comps: dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "->" in line and stripped.endswith("{"):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                current = Computation(m.group(1))
+                comps[current.name] = current
+                if stripped.startswith("ENTRY"):
+                    entry = current.name
+                continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, result_seg, opcode, rest = m.groups()
+            op = Op(name, result_seg, opcode, rest)
+            current.ops.append(op)
+            current.table[name] = op
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+#: Ops whose operands/results count as HBM traffic.  The CPU backend fuses
+#: far less than TPU, so counting every op would inflate the memory term
+#: ~10x with elementwise chains a TPU fuses for free.  We count the ops a
+#: TPU executes as HBM-visible kernels (MXU ops, reductions, data movement,
+#: fusion boundaries) — elementwise ops fuse into these.
+_COUNT_BYTES_OPS = {"dot", "convolution", "fusion", "custom-call", "reduce",
+                    "scatter", "gather", "dynamic-slice", "dynamic-update-slice",
+                    "copy", "sort", "select-and-scatter", "concatenate", "pad",
+                    "transpose", "reduce-window", "cholesky", "triangular-solve",
+                    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute"}
+
+#: fusions consisting only of these ops are "free on TPU": converts fuse into
+#: the consuming MXU op's operand read (bf16 is the MXU input format), and
+#: broadcast/reshape/bitcast are layout-only.  The CPU backend materializes
+#: them as standalone kLoop fusions, which would spuriously dominate the
+#: memory term (e.g. f32 casts of multi-GB KV caches in decode).
+_FREE_FUSION_OPS = {"parameter", "constant", "convert", "bitcast", "copy",
+                    "broadcast", "reshape", "get-tuple-element", "tuple"}
+
+
+class HloCostModel:
+    def __init__(self, hlo: str):
+        self.comps = parse_computations(hlo)
+        self.entry = self.comps.get("__entry__") or list(self.comps.values())[-1]
+        self._flops_memo: dict[str, float] = {}
+        self._bytes_memo: dict[str, float] = {}
+        self._coll_memo: dict[str, dict] = {}
+
+    # -- helpers ------------------------------------------------------------------------
+
+    def _trip_count_from_cond(self, cond: Computation) -> int:
+        """Fallback: the loop bound constant lives in the condition body
+        (possibly feeding a fusion-wrapped compare)."""
+        consts = []
+        for op in cond.ops:
+            if op.opcode == "constant" and op.result_seg.startswith("s32"):
+                m = re.match(r"(\d+)", op.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+    def _while_parts(self, op: Op) -> tuple[Optional[Computation], int]:
+        body = _BODY_RE.search(op.rest)
+        # preferred: XLA's own loop analysis, serialized in backend_config
+        m = re.search(r'known_trip_count[^}]*"n":"(\d+)"', op.rest)
+        if m:
+            trip = int(m.group(1))
+        else:
+            cond = _COND_RE.search(op.rest)
+            trip = 1
+            if cond and cond.group(1) in self.comps:
+                trip = self._trip_count_from_cond(self.comps[cond.group(1)])
+        if body and body.group(1) in self.comps:
+            return self.comps[body.group(1)], trip
+        return None, trip
+
+    def _called(self, op: Op) -> list[Computation]:
+        out = []
+        for m in _CALLED_RE.finditer(op.rest):
+            for sub in m.group(1).split(","):
+                sub = sub.strip().lstrip("%")
+                if sub in self.comps:
+                    out.append(self.comps[sub])
+        return out
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        res = _first_shape(op.result_seg)
+        if res is None:
+            return 0.0
+        res_elems = 1
+        for d in res[1]:
+            res_elems *= d
+        operands = op.operand_names()
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        if m and operands:
+            lhs_op = comp.table.get(operands[0])
+            if lhs_op is not None:
+                lhs = _first_shape(lhs_op.result_seg)
+                if lhs:
+                    contract = 1
+                    for idx in m.group(1).split(","):
+                        if idx.strip() and int(idx) < len(lhs[1]):
+                            contract *= lhs[1][int(idx)]
+                    return 2.0 * res_elems * contract
+        return 2.0 * res_elems
+
+    def _conv_flops(self, comp: Computation, op: Op) -> float:
+        res = _first_shape(op.result_seg)
+        operands = op.operand_names()
+        if res is None or len(operands) < 2:
+            return 0.0
+        res_elems = 1
+        for d in res[1]:
+            res_elems *= d
+        kern_op = comp.table.get(operands[1])
+        kern = _first_shape(kern_op.result_seg) if kern_op else None
+        if not kern:
+            return 2.0 * res_elems
+        kern_elems = 1
+        for d in kern[1]:
+            kern_elems *= d
+        out_ch = res[1][-1] if res[1] else 1
+        return 2.0 * res_elems * max(1, kern_elems // max(1, out_ch))
+
+    def _operand_bytes(self, comp: Computation, op: Op) -> int:
+        total = 0
+        for name in op.operand_names():
+            ref = comp.table.get(name)
+            if ref is not None:
+                total += ref.result_bytes
+        return total
+
+    # -- flops ---------------------------------------------------------------------------
+
+    def flops(self, comp: Optional[Computation] = None) -> float:
+        comp = comp or self.entry
+        if comp.name in self._flops_memo:
+            return self._flops_memo[comp.name]
+        self._flops_memo[comp.name] = 0.0  # cycle guard
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += self._dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                total += self._conv_flops(comp, op)
+            elif op.opcode == "while":
+                body, trip = self._while_parts(op)
+                if body is not None:
+                    total += trip * self.flops(body)
+            else:
+                for sub in self._called(op):
+                    total += self.flops(sub)
+        self._flops_memo[comp.name] = total
+        return total
+
+    # -- bytes ---------------------------------------------------------------------------
+
+    def bytes_accessed(self, comp: Optional[Computation] = None, *,
+                       count_copies: bool = True) -> float:
+        """count_copies=False excludes `copy` ops: on TPU, loop-carried state
+        (e.g. multi-GB KV caches flowing through a scan) is buffer-aliased
+        in place, while the CPU backend materializes boundary copies that
+        would dominate the memory term spuriously.  The dry-run records both
+        numbers (memory_s / memory_s_no_copy)."""
+        key = (comp or self.entry).name + ("" if count_copies else "#nc")
+        comp = comp or self.entry
+        if key in self._bytes_memo:
+            return self._bytes_memo[key]
+        self._bytes_memo[key] = 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "while":
+                body, trip = self._while_parts(op)
+                if body is not None:
+                    total += trip * self.bytes_accessed(
+                        body, count_copies=count_copies)
+                continue
+            if op.opcode in ("call", "conditional"):
+                for sub in self._called(op):
+                    total += self.bytes_accessed(sub, count_copies=count_copies)
+                continue
+            if op.opcode not in _COUNT_BYTES_OPS:
+                continue
+            if op.opcode == "copy" and not count_copies:
+                continue
+            if op.opcode == "fusion" and self._is_free_fusion(op):
+                continue
+            total += self._op_bytes(comp, op)
+        self._bytes_memo[key] = total
+        return total
+
+    def _op_bytes(self, comp: Computation, op: Op) -> float:
+        """HBM bytes for one op, with TPU in-place/slice semantics:
+
+        * dynamic-update-slice (op or DUS-rooted fusion): the result aliases
+          the big operand in place — traffic is the update payload (read) +
+          the written slice, NOT the whole buffer: 2 x (operands - largest).
+        * slice-read fusion (internal ops only dynamic-slice + free set):
+          reads the slice, not the whole operand: ~2 x result.
+        """
+        op_names = op.operand_names()
+        sizes = []
+        for name in op_names:
+            ref = comp.table.get(name)
+            sizes.append(ref.result_bytes if ref is not None else 0)
+        operand_total = sum(sizes)
+        kinds = self._fusion_kinds(op) if op.opcode == "fusion" else set()
+        if op.opcode == "dynamic-update-slice" or "dynamic-update-slice" in kinds:
+            return 2.0 * max(0, operand_total - (max(sizes) if sizes else 0))
+        if op.opcode in ("dynamic-slice", "gather") or (
+                op.opcode == "fusion" and kinds and
+                kinds <= {"dynamic-slice", "gather"}):
+            # sliced/gathered reads touch only the extracted rows, not the
+            # whole operand (scan xs slicing, embedding lookups)
+            return 2.0 * op.result_bytes
+        if op.opcode == "fusion" and "dynamic-slice" in kinds:
+            # mixed slicing fusion (scan-body pattern: slice xs + compute):
+            # whole-buffer operands are read only at the slice — cap each
+            # operand's contribution at 8x the fusion result
+            cap = 8.0 * max(op.result_bytes, 1)
+            return op.result_bytes + sum(min(s, cap) for s in sizes)
+        return op.result_bytes + operand_total
+
+    def _fusion_kinds(self, op: Op) -> set:
+        """Non-free opcodes inside a fusion's called computations."""
+        kinds: set = set()
+        for sub in self._called(op):
+            for o in sub.ops:
+                if o.opcode not in _FREE_FUSION_OPS:
+                    kinds.add(o.opcode)
+        return kinds
+
+    def _is_free_fusion(self, op: Op) -> bool:
+        return not self._fusion_kinds(op)
+
+    # -- collectives -----------------------------------------------------------------------
+
+    def collective_bytes(self, comp: Optional[Computation] = None) -> dict:
+        comp = comp or self.entry
+        if comp.name in self._coll_memo:
+            return self._coll_memo[comp.name]
+        acc = {k: 0.0 for k in COLLECTIVES}
+        counts = {k: 0.0 for k in COLLECTIVES}
+        self._coll_memo[comp.name] = {"bytes": dict(acc), "counts": dict(counts),
+                                      "total_bytes": 0}
+
+        def merge(sub: dict, mult: float):
+            for k in COLLECTIVES:
+                acc[k] += mult * sub["bytes"][k]
+                counts[k] += mult * sub["counts"][k]
+
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                acc[base] += op.result_bytes
+                counts[base] += 1
+            elif op.opcode == "while":
+                body, trip = self._while_parts(op)
+                if body is not None:
+                    merge(self.collective_bytes(body), trip)
+            else:
+                for sub in self._called(op):
+                    merge(self.collective_bytes(sub), 1)
+        out = {"bytes": acc, "counts": counts,
+               "total_bytes": int(sum(acc.values()))}
+        self._coll_memo[comp.name] = out
+        return out
+
+    # -- marked kernel regions ----------------------------------------------------------
+    # Attention/SSM cores run under jax.named_scope("KERNEL_<name>"); the
+    # scope lands in each op's metadata op_name.  Tallying their bytes lets
+    # the dry-run substitute a Pallas kernel's VMEM-resident byte profile
+    # for the jnp reference implementation's HBM-materialized one.
+
+    _MARKER_RE = re.compile(r'op_name="[^"]*KERNEL_(\w+)')
+
+    def marked_bytes(self, comp: Optional[Computation] = None) -> dict:
+        comp = comp or self.entry
+        acc: dict[str, float] = {}
+
+        def merge(sub: dict, mult: float):
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0.0) + mult * v
+
+        for op in comp.ops:
+            if op.opcode == "while":
+                body, trip = self._while_parts(op)
+                if body is not None:
+                    merge(self.marked_bytes(body), trip)
+                continue
+            if op.opcode in ("call", "conditional"):
+                for sub in self._called(op):
+                    merge(self.marked_bytes(sub), 1)
+                continue
+            if op.opcode not in _COUNT_BYTES_OPS:
+                continue
+            m = self._MARKER_RE.search(op.rest)
+            if m:
+                acc[m.group(1)] = acc.get(m.group(1), 0.0) + \
+                    op.result_bytes + self._operand_bytes(comp, op)
+        return acc
+
+    def trip_counts(self) -> list[int]:
+        trips = []
+        for comp in self.comps.values():
+            if comp.name == "__entry__":
+                continue
+            for op in comp.ops:
+                if op.opcode == "while":
+                    _, trip = self._while_parts(op)
+                    trips.append(trip)
+        return trips
+
+
+def analyze(hlo: str) -> dict:
+    model = HloCostModel(hlo)
+    coll = model.collective_bytes()
+    return {
+        "flops": model.flops(),
+        "bytes_accessed": model.bytes_accessed(),
+        "bytes_accessed_no_copy": model.bytes_accessed(count_copies=False),
+        "collectives": coll,
+        "trip_counts": model.trip_counts(),
+        "marked_bytes": model.marked_bytes(),
+    }

@@ -1,0 +1,51 @@
+"""Production mesh construction + the fabric partition vocabulary.
+
+`make_production_mesh` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and smoke tests must keep seeing 1 device.
+
+Mesh axes:
+  single-pod: (16, 16)        ("data", "model")   — 256 chips
+  multi-pod : (2, 16, 16)     ("pod", "data", "model") — 512 chips, DP across pods
+
+The fabric partition vocabulary (§7 analogue) exposes mesh sub-blocks as the
+confidential tenant shapes a scheduler may allocate (core/fabric.py enforces
+the vocabulary; here we map shapes onto the mesh grid).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Degenerate mesh over whatever devices exist (CPU smoke / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def data_axis_names(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def tenant_submesh(mesh: Mesh, size: int) -> Mesh:
+    """Carve a fabric-valid tenant partition (1/2/4/8 chips) from the mesh
+    grid — the §7 scheduling object on the ICI fabric."""
+    from repro.core.fabric import PARTITION_VOCABULARY
+    if size not in PARTITION_VOCABULARY:
+        raise ValueError(f"tenant shape {size} not in {PARTITION_VOCABULARY}")
+    flat = mesh.devices.reshape(-1)[:size]
+    return Mesh(flat.reshape(1, size), ("data", "model"))

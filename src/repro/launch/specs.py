@@ -1,0 +1,144 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero device allocation.  The dry-run lowers
+train/prefill/decode steps against these.
+
+Cache specs are produced by jax.eval_shape over model.init_cache, then
+annotated with shardings by leaf path (batch -> data axes, cache seq ->
+model axis: context-parallel KV for the decode shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import data_axis_names
+from repro.models import model as model_lib
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _batch_spec(mesh: Mesh, batch: int) -> tuple:
+    axes = data_axis_names(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % size == 0:
+        return axes
+    if "data" in axes and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()
+
+
+def batch_sharding(mesh: Mesh, batch: int, extra_dims: int) -> NamedSharding:
+    b_axes = _batch_spec(mesh, batch)
+    spec = P(b_axes if b_axes else None, *([None] * extra_dims))
+    return NamedSharding(mesh, spec)
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok = batch_sharding(mesh, B, 1)
+    specs = {
+        "tokens": _sds((B, S), jnp.int32, tok),
+        "targets": _sds((B, S), jnp.int32, tok),
+        "loss_mask": _sds((B, S), jnp.float32, tok),
+    }
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                     cfg.dtype, batch_sharding(mesh, B, 2))
+    if cfg.encoder_layers:
+        specs["frames"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                               cfg.dtype, batch_sharding(mesh, B, 2))
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": _sds((B, S), jnp.int32, batch_sharding(mesh, B, 1))}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                     cfg.dtype, batch_sharding(mesh, B, 2))
+    if cfg.encoder_layers:
+        specs["frames"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                               cfg.dtype, batch_sharding(mesh, B, 2))
+    return specs
+
+
+# ---------------------------------------------------------------------------------
+# Cache specs (decode shapes)
+# ---------------------------------------------------------------------------------
+
+def _cache_leaf_sharding(mesh: Mesh, path: str, shape: tuple, batch: int,
+                         stacked: bool) -> NamedSharding:
+    """Sharding for one cache leaf, by name + rank.
+
+    Layout: [layers?], batch -> data axes, cache-seq -> model (context
+    parallel), trailing dims unsharded.  Dims that don't divide degrade to
+    replicated.
+    """
+    axes: list = []
+    dims = list(shape)
+    i = 0
+    if stacked:
+        axes.append(None)
+        i = 1
+    b_axes = _batch_spec(mesh, batch)
+    if i < len(dims) and dims[i] == batch and b_axes:
+        axes.append(b_axes)
+    elif i < len(dims):
+        axes.append(None)
+    i += 1
+    # seq dim for kv caches: k/v/pos/c/k_pe and cross_k/v
+    leaf = path.split("/")[-1]
+    if leaf in ("k", "v", "pos", "c", "k_pe", "cross_k", "cross_v") and i < len(dims):
+        if dims[i] % mesh.shape["model"] == 0 and dims[i] > 1:
+            axes.append("model")
+        else:
+            axes.append(None)
+        i += 1
+    while i < len(dims):
+        axes.append(None)
+        i += 1
+    return NamedSharding(mesh, P(*axes))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh) -> Any:
+    enc_len = cfg.frontend_tokens if cfg.encoder_layers else 0
+    abstract = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, max_len, enc_len, dtype=cfg.dtype))
+    flat = jax.tree_util.tree_flatten_with_path(abstract)
+    specs = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        stacked = cfg.scan_layers and key.startswith("blocks")
+        sh = _cache_leaf_sharding(mesh, key, leaf.shape, batch, stacked)
+        specs.append(_sds(leaf.shape, leaf.dtype, sh))
+    return jax.tree.unflatten(flat[1], specs)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    """decode_* / long_* lower serve_step: one new token against a KV cache
+    of seq_len (per the assignment)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = batch_sharding(mesh, B, 1)
+    return {
+        "caches": cache_specs(cfg, B, S, mesh),
+        "tokens": _sds((B, 1), jnp.int32, tok),
+        "index": _sds((B,), jnp.int32,
+                      NamedSharding(mesh, P(_batch_spec(mesh, B) or None))),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape, mesh)
+    return decode_input_specs(cfg, shape, mesh)

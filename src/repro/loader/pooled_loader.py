@@ -1,0 +1,156 @@
+"""CC-aware context-pooled model loader (paper §6.1).
+
+The loader ladder, each variant one bridge-law lesson:
+
+  baseline        serialized parse + stage + single-context transfer
+                  (287 s for GPT-OSS-120B — identical on B300 and Pro 6000:
+                  the tell that the bottleneck is the software path)
+  threads8        parallel host staging, transfers still one context
+  fastsafetensors zero-copy parse; single-context transfer now dominates
+  naive_pool      per-use secure contexts: lifecycle on the critical path
+                  (5.2 s create + 3.9 s destroy per 8 workers — 253.66 s)
+  pooled          persistent 8-worker context pool (bandwidth from contexts,
+                  L4): 19.99 s
+  prewarmed       pool prewarmed before the weight iterator, torn down
+                  asynchronously after: lifecycle off the critical path
+                  entirely — 8.36 s
+
+`load()` moves the real tensors (device_put) while charging each variant's
+modeled time to the virtual clock; component rates are calibrated to the
+paper's measured ladder (constants below, validated in benchmarks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
+from repro.core.channels import SecureChannelPool, VirtualClock
+from .sharded_weights import ShardedCheckpoint
+
+GB = 1e9
+
+
+class LoaderVariant(enum.Enum):
+    BASELINE = "baseline"
+    THREADS8 = "threads8"
+    FASTSAFETENSORS = "fastsafetensors"
+    NAIVE_POOL = "naive_pool"
+    POOLED = "pooled"
+    PREWARMED = "prewarmed"
+
+
+@dataclass(frozen=True)
+class LoaderRates:
+    """Host-path component rates (calibrated to the paper's B300 ladder)."""
+
+    #: single-thread deserialize+pin+copy staging rate (the 287 s bottleneck)
+    host_stage_rate: float = 0.2252 * GB
+    #: staging thread-scaling efficiency (8 threads -> 56.82 s)
+    thread_efficiency: float = 0.6878
+    #: zero-copy (mmap) read rate, single stream (fastsafetensors path)
+    disk_read_rate: float = 2.065 * GB
+    #: zero-copy read scaling across pool workers
+    disk_parallel_efficiency: float = 0.65
+    #: same-GPU peer-copy assembly rate (26.8-32.7 GB/s observed)
+    assemble_rate: float = 30.0 * GB
+    #: naive per-use context churn: context (re)creates per load
+    #: (per-transfer-group secure-context thrash measured at 253.66 s)
+    naive_context_uses: int = 196
+
+
+class PooledLoader:
+    def __init__(self, bridge: BridgeModel, *, n_workers: int = 8,
+                 rates: Optional[LoaderRates] = None,
+                 clock: Optional[VirtualClock] = None):
+        self.bridge = bridge
+        self.n_workers = n_workers
+        self.rates = rates or LoaderRates()
+        self.clock = clock or VirtualClock()
+
+    # -- cost model (virtual clock) -------------------------------------------------------
+
+    def modeled_load_time(self, total_bytes: int, n_shards: int,
+                          variant: LoaderVariant) -> dict:
+        """Per-component load-time breakdown in seconds."""
+        r = self.rates
+        p = self.bridge.profile
+        single_bw = self.bridge.aggregate_bandwidth(Direction.H2D, 1)
+        pool_bw = self.bridge.aggregate_bandwidth(Direction.H2D, self.n_workers)
+        lifecycle = self.bridge.pool_lifecycle_cost(self.n_workers)
+        comp = {"stage": 0.0, "transfer": 0.0, "lifecycle": 0.0,
+                "assemble": 0.0, "toll": n_shards * p.cc_fresh_toll}
+
+        if variant is LoaderVariant.BASELINE:
+            comp["stage"] = total_bytes / r.host_stage_rate
+            comp["transfer"] = total_bytes / single_bw
+        elif variant is LoaderVariant.THREADS8:
+            comp["stage"] = total_bytes / (
+                r.host_stage_rate * self.n_workers * r.thread_efficiency)
+            comp["transfer"] = total_bytes / single_bw
+        elif variant is LoaderVariant.FASTSAFETENSORS:
+            comp["stage"] = total_bytes / r.disk_read_rate
+            comp["transfer"] = total_bytes / single_bw
+        elif variant is LoaderVariant.NAIVE_POOL:
+            comp["stage"] = total_bytes / (
+                r.disk_read_rate * self.n_workers * r.disk_parallel_efficiency)
+            comp["transfer"] = total_bytes / single_bw   # churn kills overlap
+            # per-use context churn: every transfer group pays create+destroy
+            # on the critical path (measured 253.66 s — within 1.2x of the
+            # 287 s baseline despite parallel reads: lifecycle ate the win)
+            comp["lifecycle"] = r.naive_context_uses * (
+                p.context_create + p.context_destroy)
+            comp["assemble"] = total_bytes / r.assemble_rate
+        elif variant in (LoaderVariant.POOLED, LoaderVariant.PREWARMED):
+            comp["stage"] = total_bytes / (
+                r.disk_read_rate * self.n_workers * r.disk_parallel_efficiency)
+            comp["transfer"] = total_bytes / pool_bw
+            comp["assemble"] = total_bytes / r.assemble_rate
+            if variant is LoaderVariant.POOLED:
+                # mid-load context creation breaks the read/transfer/assemble
+                # pipeline: components serialize (paper: 19.99 s)
+                comp["lifecycle"] = (lifecycle["create"] + lifecycle["destroy"]
+                                     + lifecycle["pinned_alloc"])
+            else:
+                # prewarmed pool: transfers/assembly pipeline behind the
+                # zero-copy reads; only the non-overlappable tail remains
+                overlap = 0.35
+                comp["transfer"] *= 1 - overlap
+                comp["assemble"] *= 1 - overlap
+        comp["total"] = sum(comp.values())
+        return comp
+
+    # -- real load ---------------------------------------------------------------------------
+
+    def load(self, ckpt: ShardedCheckpoint, variant: LoaderVariant,
+             *, device: Optional[jax.Device] = None) -> tuple[dict, dict]:
+        """Load all tensors (real device_put), charging modeled time.
+
+        Returns (tensors, breakdown).
+        """
+        device = device or jax.devices()[0]
+        total = ckpt.total_bytes()
+        breakdown = self.modeled_load_time(total, ckpt.n_shards, variant)
+        self.clock.advance(breakdown["total"])
+
+        pool = None
+        if variant in (LoaderVariant.POOLED, LoaderVariant.PREWARMED):
+            pool = SecureChannelPool(self.bridge, self.n_workers, clock=self.clock)
+            if variant is LoaderVariant.PREWARMED:
+                pool.prewarm()          # off the critical path by contract
+            else:
+                pool.ensure_ready()
+
+        tensors = {}
+        for shard in range(ckpt.n_shards):
+            for name, arr in ckpt.iter_shard(shard):
+                tensors[name] = jax.device_put(arr, device)
+        if pool is not None:
+            pool.teardown(async_=(variant is LoaderVariant.PREWARMED))
+        return tensors, breakdown

@@ -1,0 +1,28 @@
+"""Modality frontends — STUBS per the assignment.
+
+"[audio]/[vlm] entries specify the transformer BACKBONE only; the modality
+frontend is a STUB (input_specs() provides precomputed frame/patch
+embeddings)."
+
+These helpers define the stub contract: the shape/dtype of the precomputed
+embeddings each frontend would deliver, plus a deterministic synthetic
+generator for smoke tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontend_embedding_shape(cfg, batch: int) -> tuple[int, int, int]:
+    """(batch, tokens, d_model) of the precomputed frontend embeddings."""
+    if not cfg.frontend:
+        raise ValueError(f"{cfg.name} has no modality frontend")
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def synthetic_frontend_embeddings(key, cfg, batch: int, dtype=jnp.bfloat16):
+    """Deterministic stand-in for InternViT patch / w2v-BERT frame outputs."""
+    shape = frontend_embedding_shape(cfg, batch)
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,145 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter carries logical axis names (layers.py `make_param`); this
+module resolves them to `NamedSharding`s for a concrete mesh, with per-arch
+fallbacks when a dimension does not divide the mesh axis (e.g. qwen1.5's 20
+heads or hymba's 32001 vocab on a 16-way model axis -> row-parallel weights /
+embed-sharded embeddings instead).
+
+Baseline layout (iterated in EXPERIMENTS.md §Perf):
+  params:      heads/mlp/vocab/expert -> "model" (TP/EP);
+               embed -> "data" when cfg.fsdp (ZeRO-3 gather-on-use)
+  activations: batch -> ("pod","data"); seq -> "model" when
+               cfg.seq_shard_activations (Megatron-style SP); embed unsharded
+  KV cache:    batch -> "data", seq -> "model" (decode shapes)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _divides(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([_axis_size(mesh, n) for n in names]))
+    return dim % size == 0
+
+
+class ShardingRules:
+    """Resolves logical axes to mesh axes for one (cfg, mesh) pair."""
+
+    def __init__(self, cfg, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        model_ok = lambda dim: dim % _axis_size(mesh, "model") == 0
+        data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+        heads_shardable = model_ok(cfg.n_heads)
+        kv_shardable = model_ok(cfg.n_kv_heads) and not cfg.use_mla
+        vocab_shardable = model_ok(cfg.vocab_size)
+        mlp_dim = cfg.d_ff if cfg.d_ff else cfg.ssm_expand * cfg.d_model
+        mlp_shardable = model_ok(mlp_dim)
+        expert_shardable = (cfg.n_routed_experts == 0
+                            or model_ok(cfg.n_routed_experts))
+        embed_fsdp = cfg.fsdp and cfg.d_model % int(np.prod(
+            [_axis_size(mesh, a) for a in data_axes if a == "data"])) == 0
+
+        self.param_rules = {
+            "embed": "data" if embed_fsdp else None,
+            "heads": "model" if heads_shardable else None,
+            "kv_heads": "model" if kv_shardable else None,
+            "head_dim": None,
+            "mlp": "model" if mlp_shardable else None,
+            "vocab": "model" if vocab_shardable else None,
+            "expert": "model" if expert_shardable else None,
+            "kv_lora": None,
+            "layers": None,
+            None: None,
+        }
+        # row-parallel fallback: if neither heads nor mlp shard, push the
+        # model axis onto the contracting embed dim of weight matrices
+        if not heads_shardable and not cfg.use_mla:
+            self.attn_row_parallel = True
+        else:
+            self.attn_row_parallel = False
+
+        self.act_rules = {
+            "batch": data_axes if len(data_axes) > 1 else data_axes[0],
+            "seq": "model" if cfg.seq_shard_activations else None,
+            "embed": None,
+            "heads": self.param_rules["heads"],
+            "kv_heads": self.param_rules["kv_heads"],
+            "mlp": self.param_rules["mlp"],
+            "expert": self.param_rules["expert"],
+            "vocab": self.param_rules["vocab"],
+            "kv_seq": "model",      # decode-shape KV cache: context parallel
+            "head_dim": None,
+            "frames": None,
+            None: None,
+        }
+
+    # -- params ------------------------------------------------------------------------
+
+    def param_spec(self, logical: tuple, shape: tuple) -> P:
+        axes = []
+        used = set()
+        for name, dim in zip(logical, shape):
+            ax = self.param_rules.get(name, None)
+            if ax is not None and (ax in used or not _divides(dim, self.mesh, ax)):
+                ax = None
+            if ax is not None:
+                used.add(ax)
+            axes.append(ax)
+        return P(*axes)
+
+    def param_sharding(self, logical: tuple, shape: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(logical, shape))
+
+    def params_shardings(self, params):
+        """Map a Param pytree to a same-structure tree of NamedShardings."""
+        from repro.models.layers import Param, is_param
+
+        def leaf(p):
+            return Param(self.param_sharding(p.axes, p.value.shape), p.axes)
+        return jax.tree.map(leaf, params, is_leaf=is_param)
+
+    # -- activations -------------------------------------------------------------------
+
+    def act_spec(self, logical: tuple, shape: Optional[tuple] = None) -> P:
+        axes = []
+        used = set()
+        for i, name in enumerate(logical):
+            ax = self.act_rules.get(name, None)
+            if ax is not None:
+                flat = ax if isinstance(ax, tuple) else (ax,)
+                if any(a in used for a in flat):
+                    ax = None
+                elif shape is not None and not _divides(shape[i], self.mesh, ax):
+                    ax = None
+                else:
+                    used.update(flat)
+            axes.append(ax)
+        return P(*axes)
+
+    def act_sharding(self, logical: tuple, shape: Optional[tuple] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.act_spec(logical, shape))
+
+    def resolver(self):
+        """Activation resolver for layers.shard_hint: size-checked, so hints
+        on non-dividing dims degrade to replicated instead of erroring."""
+        def fn(logical: tuple, shape: Optional[tuple] = None):
+            try:
+                return self.act_sharding(logical, shape)
+            except Exception:
+                return None
+        return fn

@@ -1,0 +1,399 @@
+"""Recurrent sequence-mixing blocks: xLSTM (mLSTM + sLSTM) and Mamba-style
+SSD heads (hymba's parallel-hybrid partner).
+
+TPU adaptation notes (DESIGN.md §2): the original Mamba selective scan is a
+GPU-fused-kernel design whose naive JAX form materializes (B,S,E,N) decay
+tensors — hostile to both HBM and VMEM.  We implement the Mamba-2/SSD
+formulation (scalar-per-head decay): intra-chunk attention-like compute +
+inter-chunk state scan, which maps onto the MXU the way chunked linear
+attention does.  mLSTM uses the same chunked structure with stabilized
+exponential gating.  sLSTM is inherently sequential (recurrent h->gates
+dependency) and runs as a lax.scan over time — faithful to the paper, which
+accepts this.
+
+Cache/state structures (decode):
+  mLSTM: {"C": (B,H,dk,dv), "n": (B,H,dk), "m": (B,H)}
+  sLSTM: {"c","n","h","m"}: (B, inner)
+  mamba: {"ssm": (B,H,dh,N), "conv": (B,W-1,E)}
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import Params, apply_norm, init_norm, make_param, pvalue
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------------
+
+def init_mlstm(key, cfg) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = inner // h
+    dk = dh // 2                      # q/k dim (xLSTM uses dv/2)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": make_param(ks[0], (d, 2 * inner), ("embed", "mlp"), fan_in=d, dtype=cfg.dtype),
+        "wq": make_param(ks[1], (inner, h, dk), ("mlp", "heads", "head_dim"), fan_in=inner, dtype=cfg.dtype),
+        "wk": make_param(ks[2], (inner, h, dk), ("mlp", "heads", "head_dim"), fan_in=inner, dtype=cfg.dtype),
+        "wv": make_param(ks[3], (inner, h, dh), ("mlp", "heads", "head_dim"), fan_in=inner, dtype=cfg.dtype),
+        "wi": make_param(ks[4], (inner, h), ("mlp", "heads"), fan_in=inner, dtype=F32),
+        "wf": make_param(ks[5], (inner, h), ("mlp", "heads"), fan_in=inner, dtype=F32),
+        "bf": make_param(ks[6], (h,), ("heads",), ones=True, dtype=F32),
+        "out_norm": init_norm(ks[7], inner, "rmsnorm", cfg.dtype),
+        "w_down": make_param(ks[8], (inner, d), ("mlp", "embed"), fan_in=inner, dtype=cfg.dtype),
+    }
+
+
+def _mlstm_gates(p, u):
+    """u: (B,S,inner) -> per-head q,k,v and log gates."""
+    q = jnp.einsum("bse,ehk->bshk", u, pvalue(p["wq"]))
+    k = jnp.einsum("bse,ehk->bshk", u, pvalue(p["wk"]))
+    v = jnp.einsum("bse,ehk->bshk", u, pvalue(p["wv"]))
+    uf = u.astype(F32)
+    log_i = jnp.einsum("bse,eh->bsh", uf, pvalue(p["wi"]))              # pre-act input gate
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bsh", uf, pvalue(p["wf"])) + pvalue(p["bf"]))
+    return q, k, v, log_i, log_f
+
+
+def mlstm_chunked(p: Params, x: jax.Array, cfg, *, chunk: int = 256,
+                  state: Optional[dict] = None, use_kernel: bool = False):
+    """Chunkwise-parallel mLSTM forward with stabilized exponential gating.
+
+    Returns (y, final_state).  Memory per chunk is O(chunk^2 + dk*dv).
+    """
+    b, s, d = x.shape
+    inner = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = inner // h
+    dk = dh // 2
+    up = jnp.einsum("bsd,de->bse", x, pvalue(p["w_up"]))
+    u, z = up[..., :inner], up[..., inner:]
+    q, k, v, log_i, log_f = _mlstm_gates(p, u)
+    scale = 1.0 / math.sqrt(dk)
+
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad)) + ((0, 0),), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad)) + ((0, 0),))
+
+    def chunk_arrays(t, feat_dims):
+        return t.reshape((b, nchunk, chunk) + t.shape[2:])
+
+    qc = chunk_arrays(q, 2).astype(F32) * scale
+    kc = chunk_arrays(k, 2).astype(F32)
+    vc = chunk_arrays(v, 2).astype(F32)
+    lic = chunk_arrays(log_i, 1)
+    lfc = chunk_arrays(log_f, 1)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dk, dh), F32)
+        n0 = jnp.zeros((b, h, dk), F32)
+        m0 = jnp.full((b, h), -1e30, F32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def per_chunk(carry, blk):
+        C, n, m = carry
+        import jax as _jax
+        _scope = _jax.named_scope("KERNEL_mlstm_scan")
+        _scope.__enter__()
+        qb, kb, vb, li, lf = blk                        # (b,chunk,h,*) / (b,chunk,h)
+        F = jnp.cumsum(lf, axis=1)                      # (b,chunk,h) inclusive
+        # intra-chunk log decay D[t, s] = F_t - F_s + li_s   (s <= t)
+        Dmat = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        tpos = jnp.arange(chunk)
+        causal = tpos[:, None] >= tpos[None, :]
+        Dmat = jnp.where(causal[None, :, :, None], Dmat, -1e30)
+        # inter-chunk contribution has magnitude m + F_t
+        m_inter = m[:, None, :] + F                     # (b,chunk,h)
+        m_t = jnp.maximum(Dmat.max(axis=2), m_inter)    # (b,chunk,h) stabilizer
+        intra_w = jnp.exp(Dmat - m_t[:, :, None, :])    # (b,t,s,h)
+        inter_w = jnp.exp(m_inter - m_t)                # (b,t,h)
+
+        scores = jnp.einsum("bthk,bshk->bths", qb, kb)  # (b,t,h,s)
+        intra = jnp.einsum("bths,btsh,bshv->bthv", scores, intra_w, vb)
+        inter = jnp.einsum("bthk,bhkv->bthv", qb * inter_w[..., None], C)
+        num = intra + inter
+
+        norm_intra = jnp.einsum("btsh,bshk->bthk", intra_w, kb)
+        qdotn = jnp.einsum("bthk,bthk->bth", qb, norm_intra) \
+            + jnp.einsum("bthk,bhk->bth", qb * inter_w[..., None], n)
+        denom = jnp.maximum(jnp.abs(qdotn), jnp.exp(-m_t))
+        out = num / denom[..., None]
+
+        # state update to end of chunk
+        F_tot = F[:, -1]                                # (b,h)
+        m_new = jnp.maximum(m + F_tot, (F_tot[:, None] - F + li).max(axis=1))
+        w_carry = jnp.exp(m + F_tot - m_new)
+        kv_w = jnp.exp(F_tot[:, None] - F + li - m_new[:, None])   # (b,chunk,h)
+        C_new = C * w_carry[..., None, None] + jnp.einsum(
+            "bshk,bsh,bshv->bhkv", kb, kv_w, vb)
+        n_new = n * w_carry[..., None] + jnp.einsum("bshk,bsh->bhk", kb, kv_w)
+        _scope.__exit__(None, None, None)
+        return (C_new, n_new, m_new), out
+
+    blocks = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+              jnp.moveaxis(lic, 1, 0), jnp.moveaxis(lfc, 1, 0))
+    (C, n, m), outs = lax.scan(per_chunk, (C0, n0, m0), blocks)
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, nchunk * chunk, h, dh)[:, :s]
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y, "rmsnorm")
+    y = y * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", y, pvalue(p["w_down"]))
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(p: Params, x: jax.Array, cfg, state: dict):
+    """Single-token decode step.  x: (B,1,D)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = inner // h
+    dk = dh // 2
+    up = jnp.einsum("bsd,de->bse", x, pvalue(p["w_up"]))
+    u, z = up[..., :inner], up[..., inner:]
+    q, k, v, log_i, log_f = _mlstm_gates(p, u)
+    q, k, v = q[:, 0].astype(F32) / math.sqrt(dk), k[:, 0].astype(F32), v[:, 0].astype(F32)
+    li, lf = log_i[:, 0], log_f[:, 0]                   # (b,h)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    C = C * fw[..., None, None] + iw[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = n * fw[..., None] + iw[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    y = apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", y, pvalue(p["w_down"]))
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(b: int, cfg, dtype=F32) -> dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = inner // h
+    dk = dh // 2
+    return {"C": jnp.zeros((b, h, dk, dh), dtype),
+            "n": jnp.zeros((b, h, dk), dtype),
+            "m": jnp.full((b, h), -1e30, dtype)}
+
+
+# ---------------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block) — inherently sequential
+# ---------------------------------------------------------------------------------
+
+def init_slstm(key, cfg) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    ks = jax.random.split(key, 8)
+    p = {"w_in": make_param(ks[0], (d, 4 * inner), ("embed", "mlp"), fan_in=d, dtype=F32),
+         "r": make_param(ks[1], (inner, 4), ("mlp", None), fan_in=1, dtype=F32),
+         "b": make_param(ks[2], (4 * inner,), ("mlp",), zeros=True, dtype=F32),
+         "out_norm": init_norm(ks[3], inner, "rmsnorm", cfg.dtype),
+         "w_down": make_param(ks[4], (inner, d), ("mlp", "embed"), fan_in=inner, dtype=cfg.dtype),
+         "w_z": make_param(ks[5], (d, inner), ("embed", "mlp"), fan_in=d, dtype=cfg.dtype)}
+    return p
+
+
+def _slstm_cell(p, xt, state):
+    """xt: (B, 4*inner) pre-activations; diagonal recurrence (per-unit R)."""
+    c, n, hprev, m = state
+    inner = c.shape[-1]
+    r = pvalue(p["r"])                                   # (inner, 4) diagonal recurrent
+    zi, ii, fi, oi = jnp.split(xt, 4, axis=-1)
+    zt = jnp.tanh(zi + hprev * r[:, 0])
+    log_i = ii + hprev * r[:, 1]
+    log_f = jax.nn.log_sigmoid(fi + hprev * r[:, 2])
+    o = jax.nn.sigmoid(oi + hprev * r[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    iw = jnp.exp(log_i - m_new)
+    fw = jnp.exp(log_f + m - m_new)
+    c_new = fw * c + iw * zt
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg, state: Optional[dict] = None):
+    b, s, d = x.shape
+    inner = cfg.ssm_expand * d
+    pre = jnp.einsum("bsd,dk->bsk", x.astype(F32), pvalue(p["w_in"])) + pvalue(p["b"])
+    z = jnp.einsum("bsd,de->bse", x, pvalue(p["w_z"]))
+    if state is None:
+        st = (jnp.zeros((b, inner), F32), jnp.zeros((b, inner), F32),
+              jnp.zeros((b, inner), F32), jnp.full((b, inner), -1e30, F32))
+    else:
+        st = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, xt):
+        new = _slstm_cell(p, xt, carry)
+        return new, new[2]
+
+    st, hs = lax.scan(step, st, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)           # (b,s,inner)
+    y = apply_norm(p["out_norm"], y, "rmsnorm") * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", y, pvalue(p["w_down"]))
+    return y, {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+
+
+def slstm_step(p: Params, x: jax.Array, cfg, state: dict):
+    y, new = slstm_forward(p, x, cfg, state)
+    return y, new
+
+
+def init_slstm_state(b: int, cfg) -> dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    return {"c": jnp.zeros((b, inner), F32), "n": jnp.zeros((b, inner), F32),
+            "h": jnp.zeros((b, inner), F32), "m": jnp.full((b, inner), -1e30, F32)}
+
+
+# ---------------------------------------------------------------------------------
+# Mamba-2 / SSD heads (hymba's SSM path)
+# ---------------------------------------------------------------------------------
+
+def init_mamba(key, cfg) -> Params:
+    d = cfg.d_model
+    e = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = e // h
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": make_param(ks[0], (d, 2 * e), ("embed", "mlp"), fan_in=d, dtype=cfg.dtype),
+        "conv": make_param(ks[1], (cfg.conv_width, e), (None, "mlp"), fan_in=cfg.conv_width, dtype=cfg.dtype),
+        "wB": make_param(ks[2], (e, h, n), ("mlp", "heads", None), fan_in=e, dtype=cfg.dtype),
+        "wC": make_param(ks[3], (e, h, n), ("mlp", "heads", None), fan_in=e, dtype=cfg.dtype),
+        "w_dt": make_param(ks[4], (e, h), ("mlp", "heads"), fan_in=e, dtype=F32),
+        "a_log": make_param(ks[5], (h,), ("heads",), ones=True, dtype=F32),
+        "d_skip": make_param(ks[6], (h,), ("heads",), ones=True, dtype=F32),
+        "w_down": make_param(ks[7], (e, d), ("mlp", "embed"), fan_in=e, dtype=cfg.dtype),
+    }
+
+
+def _mamba_proj(p, x, cfg, conv_state=None):
+    """Shared input path: in-proj, causal conv, gates.  Returns
+    (u:(B,S,H,dh), z, B_, C_, dt, new_conv_state)."""
+    b, s, d = x.shape
+    e = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = e // h
+    w = cfg.conv_width
+    up = jnp.einsum("bsd,de->bse", x, pvalue(p["w_in"]))
+    u, z = up[..., :e], up[..., e:]
+    # causal depthwise conv along seq
+    hist = conv_state if conv_state is not None else jnp.zeros((b, w - 1, e), u.dtype)
+    seq = jnp.concatenate([hist.astype(u.dtype), u], axis=1)
+    kern = pvalue(p["conv"])
+    conv = sum(seq[:, i:i + s] * kern[i] for i in range(w))
+    u = jax.nn.silu(conv)
+    new_conv = seq[:, -(w - 1):] if w > 1 else hist
+    B_ = jnp.einsum("bse,ehn->bshn", u, pvalue(p["wB"]))
+    C_ = jnp.einsum("bse,ehn->bshn", u, pvalue(p["wC"]))
+    dt = jax.nn.softplus(jnp.einsum("bse,eh->bsh", u.astype(F32), pvalue(p["w_dt"])))
+    uh = u.reshape(b, s, h, dh)
+    return uh, z, B_, C_, dt, new_conv
+
+
+def mamba_chunked(p: Params, x: jax.Array, cfg, *, chunk: int = 256,
+                  state: Optional[dict] = None):
+    """SSD chunked forward.  Scalar-per-head decay a^dt; state (B,H,dh,N)."""
+    b, s, d = x.shape
+    e = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = e // h
+    n = cfg.ssm_state
+    conv_state = state["conv"] if state is not None else None
+    uh, z, B_, C_, dt, new_conv = _mamba_proj(p, x, cfg, conv_state)
+    a = -jnp.exp(pvalue(p["a_log"]))                     # (h,) negative decay rate
+    la = dt * a                                          # (b,s,h) log decay per step
+    xbar = uh.astype(F32) * dt[..., None]                # dt-weighted input
+
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        uh = jnp.pad(uh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+
+    def chunked(t):
+        return jnp.moveaxis(t.reshape((b, nchunk, chunk) + t.shape[2:]), 1, 0)
+
+    xc, Bc, Cc, lac = chunked(xbar), chunked(B_.astype(F32)), chunked(C_.astype(F32)), chunked(la)
+    h0 = state["ssm"] if state is not None else jnp.zeros((b, h, dh, n), F32)
+
+    def per_chunk(carry, blk):
+        hst = carry
+        import jax as _jax
+        _scope = _jax.named_scope("KERNEL_ssd_scan")
+        _scope.__enter__()
+        xb, Bb, Cb, lab = blk
+        L = jnp.cumsum(lab, axis=1)                      # (b,chunk,h)
+        # intra-chunk: scores(t,s) = C_t . B_s * exp(L_t - L_s), s <= t
+        dec = L[:, :, None, :] - L[:, None, :, :]
+        tpos = jnp.arange(chunk)
+        causal = tpos[:, None] >= tpos[None, :]
+        dec = jnp.where(causal[None, :, :, None], dec, -1e30)
+        scores = jnp.einsum("bthn,bshn->bths", Cb, Bb) * jnp.exp(dec).transpose(0, 1, 3, 2)
+        intra = jnp.einsum("bths,bshv->bthv", scores, xb)
+        inter = jnp.einsum("bthn,bhvn->bthv", Cb * jnp.exp(L)[..., None], hst)
+        out = intra + inter
+        # state to end of chunk
+        Ltot = L[:, -1]                                  # (b,h)
+        w_in = jnp.exp(Ltot[:, None] - L)                # (b,chunk,h)
+        h_new = hst * jnp.exp(Ltot)[..., None, None] + jnp.einsum(
+            "bshn,bsh,bshv->bhvn", Bb, w_in, xb)
+        _scope.__exit__(None, None, None)
+        return h_new, out
+
+    hst, outs = lax.scan(per_chunk, h0, (xc, Bc, Cc, lac))
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, nchunk * chunk, h, dh)[:, :s]
+    y = y + uh[:, :s].astype(F32) * pvalue(p["d_skip"])[None, None, :, None]
+    y = y.reshape(b, s, e).astype(x.dtype) * jax.nn.silu(z[:, :s] if pad else z)
+    y = jnp.einsum("bse,ed->bsd", y, pvalue(p["w_down"]))
+    return y, {"ssm": hst, "conv": new_conv}
+
+
+def mamba_step(p: Params, x: jax.Array, cfg, state: dict):
+    """Single-token decode.  x: (B,1,D); O(1) state update."""
+    b = x.shape[0]
+    d = cfg.d_model
+    e = cfg.ssm_expand * d
+    h = cfg.n_heads
+    dh = e // h
+    uh, z, B_, C_, dt, new_conv = _mamba_proj(p, x, cfg, state["conv"])
+    a = -jnp.exp(pvalue(p["a_log"]))
+    decay = jnp.exp(dt[:, 0] * a)                        # (b,h)
+    xbar = uh[:, 0].astype(F32) * dt[:, 0][..., None]    # (b,h,dh)
+    hst = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bhv->bhvn", B_[:, 0].astype(F32), xbar)
+    y = jnp.einsum("bhn,bhvn->bhv", C_[:, 0].astype(F32), hst)
+    y = y + uh[:, 0].astype(F32) * pvalue(p["d_skip"])[None, :, None]
+    y = y.reshape(b, 1, e).astype(x.dtype) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", y, pvalue(p["w_down"]))
+    return y, {"ssm": hst, "conv": new_conv}
+
+
+def init_mamba_state(b: int, cfg) -> dict:
+    e = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    dh = e // h
+    return {"ssm": jnp.zeros((b, h, dh, cfg.ssm_state), F32),
+            "conv": jnp.zeros((b, cfg.conv_width - 1, e), F32)}

@@ -1,0 +1,111 @@
+"""Paged KV-cache pool + block tables (vLLM-style, TPU-kernel-compatible).
+
+Physical layout matches the paged_attention kernel: per layer a page pool
+(n_pages, page_size, kv_heads, head_dim) with per-request block tables.
+The pool also carries the metadata the reuse-aware offload policy (§6.2)
+consumes: per-page content hashes and observation counts.
+
+The engine can run in two cache modes:
+  * "slots"  — contiguous per-slot caches via models.model.init_cache
+               (used for CPU integration tests; exact wrt the model)
+  * "paged"  — this pool + the Pallas paged kernel (the production mode)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PageMeta:
+    page_id: int
+    #: content hash of the token block this page holds (prefix caching key)
+    token_hash: Optional[int] = None
+    #: how many times this content has been observed (reuse evidence, §6.2)
+    seen_count: int = 0
+    request_id: Optional[str] = None
+    logical_index: int = -1   # position within the request's table
+
+
+class PagePool:
+    """One layer group's physical page pool + allocation state."""
+
+    def __init__(self, n_pages: int, page_size: int, n_kv_heads: int,
+                 head_dim: int, n_layers: int, dtype=jnp.bfloat16):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.shape = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+        self.k = jnp.zeros(self.shape, dtype)
+        self.v = jnp.zeros(self.shape, dtype)
+        self.free: list[int] = list(range(n_pages))
+        self.meta: dict[int, PageMeta] = {
+            i: PageMeta(page_id=i) for i in range(n_pages)}
+        #: content hash -> page id, for prefix reuse
+        self.hash_index: dict[int, int] = {}
+        self.seen_counts: dict[int, int] = {}
+
+    # -- allocation ---------------------------------------------------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def allocate(self, request_id: str, n_tokens: int,
+                 token_blocks: Optional[list[tuple]] = None) -> Optional[list[int]]:
+        """Allocate a block table for a request; None if pool exhausted.
+
+        token_blocks: per-page token tuples for content hashing (prefix reuse
+        and offload-evidence tracking).
+        """
+        need = self.pages_needed(n_tokens)
+        if len(self.free) < need:
+            return None
+        table = []
+        for i in range(need):
+            pid = self.free.pop()
+            meta = self.meta[pid]
+            meta.request_id = request_id
+            meta.logical_index = i
+            if token_blocks and i < len(token_blocks):
+                h = hash(token_blocks[i])
+                meta.token_hash = h
+                self.seen_counts[h] = self.seen_counts.get(h, 0) + 1
+                meta.seen_count = self.seen_counts[h]
+            table.append(pid)
+        return table
+
+    def release(self, table: list[int]) -> None:
+        for pid in table:
+            meta = self.meta[pid]
+            meta.request_id = None
+            meta.logical_index = -1
+            self.free.append(pid)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_pages
+
+    # -- tensor ops -----------------------------------------------------------------------
+
+    def write_token(self, layer: int, page_id: int, offset: int,
+                    k_tok: jax.Array, v_tok: jax.Array) -> None:
+        """Write one token's K/V into a page (decode append)."""
+        self.k = self.k.at[layer, page_id, offset].set(k_tok.astype(self.k.dtype))
+        self.v = self.v.at[layer, page_id, offset].set(v_tok.astype(self.v.dtype))
+
+    def layer_views(self, layer: int) -> tuple[jax.Array, jax.Array]:
+        return self.k[layer], self.v[layer]
+
+
+def block_table_array(tables: dict[str, list[int]], order: list[str],
+                      pages_max: int) -> np.ndarray:
+    """Dense (B, pages_max) int32 block-table batch for the kernel."""
+    out = np.zeros((len(order), pages_max), np.int32)
+    for i, rid in enumerate(order):
+        t = tables[rid][:pages_max]
+        out[i, :len(t)] = t
+    return out

@@ -1,0 +1,145 @@
+"""Reuse-aware KV-cache offload (paper §6.2).
+
+Under CC every byte across the bridge costs more, so offload must be
+*evidence-driven*: the default spill-everything policy moves multi-GiB
+device-to-host against MiB-scale restores; filtering to blocks observed at
+least `store_threshold` times cut measured spill volume 2.3 GiB -> 2.3 MB
+and improved CC-on warm TTFT 2.97x.
+
+The manager tracks page-content observation counts (fed by PagePool), makes
+spill decisions at eviction time, stores payloads host-side keyed by content
+hash, and restores on prefix hits — all crossings priced through the
+TransferGateway so policies are comparable on the virtual clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.gateway import TransferGateway
+from repro.core.policy import OffloadPolicy
+
+
+@dataclass
+class OffloadStats:
+    spilled_blocks: int = 0
+    spilled_bytes: int = 0
+    skipped_blocks: int = 0
+    restored_blocks: int = 0
+    restored_bytes: int = 0
+    restore_hits: int = 0
+    restore_misses: int = 0
+
+
+@dataclass
+class HostBlock:
+    token_hash: int
+    payload_bytes: int
+    seen_count: int
+    #: host-side copy of the KV payload (None when metadata-only accounting)
+    payload: Optional[np.ndarray] = None
+
+
+class OffloadManager:
+    def __init__(self, gateway: TransferGateway, policy: OffloadPolicy,
+                 *, store_threshold: int = 2, block_bytes: int = 0):
+        self.gateway = gateway
+        self.policy = policy
+        self.store_threshold = store_threshold
+        self.block_bytes = block_bytes
+        self.host_store: dict[int, HostBlock] = {}
+        self.seen_counts: dict[int, int] = {}
+        self.stats = OffloadStats()
+
+    # -- observation (prefix traffic feeds the evidence) --------------------------------
+
+    def observe(self, token_hash: int) -> int:
+        self.seen_counts[token_hash] = self.seen_counts.get(token_hash, 0) + 1
+        return self.seen_counts[token_hash]
+
+    def should_spill(self, token_hash: int) -> bool:
+        if self.policy is OffloadPolicy.NO_OFFLOAD:
+            return False
+        if self.policy is OffloadPolicy.SPILL_ALL:
+            return True
+        return self.seen_counts.get(token_hash, 0) >= self.store_threshold
+
+    # -- eviction ------------------------------------------------------------------------
+
+    def evict(self, token_hash: int, payload: Optional[np.ndarray] = None,
+              payload_bytes: Optional[int] = None) -> bool:
+        """Called when a page leaves the device pool.  Returns True if the
+        block crossed the bridge (spilled)."""
+        nbytes = payload_bytes if payload_bytes is not None else (
+            payload.nbytes if payload is not None else self.block_bytes)
+        if token_hash in self.host_store:
+            # content-addressed store: identical content never re-spills
+            self.stats.skipped_blocks += 1
+            return False
+        if not self.should_spill(token_hash):
+            self.stats.skipped_blocks += 1
+            return False
+        if payload is not None:
+            self.gateway.d2h(payload, op_class="kv_spill_d2h")
+        else:
+            from repro.core.bridge import Crossing, Direction, StagingKind
+            cost = self.gateway.bridge.crossing_time(
+                Crossing(nbytes, Direction.D2H, StagingKind.REGISTERED),
+                n_contexts=self.gateway.pool.n_workers)
+            self.gateway.clock.advance(cost)
+            self.gateway.stats.d2h_crossings += 1
+            self.gateway.stats.d2h_bytes += nbytes
+            self.gateway.stats.bridge_time_s += cost
+        self.host_store[token_hash] = HostBlock(
+            token_hash, nbytes, self.seen_counts.get(token_hash, 0), payload)
+        self.stats.spilled_blocks += 1
+        self.stats.spilled_bytes += nbytes
+        return True
+
+    # -- restore -------------------------------------------------------------------------
+
+    def restore(self, token_hashes: list) -> tuple[int, int]:
+        """Restore a prefix's blocks from the host store (bulk, pooled —
+        drained pattern).  Returns (hits, bytes_restored)."""
+        hits = [self.host_store[h] for h in token_hashes if h in self.host_store]
+        misses = len(token_hashes) - len(hits)
+        self.stats.restore_hits += len(hits)
+        self.stats.restore_misses += misses
+        total = sum(b.payload_bytes for b in hits)
+        if hits:
+            payloads = [b.payload if b.payload is not None
+                        else np.zeros(b.payload_bytes, np.uint8) for b in hits]
+            self.gateway.bulk_h2d_pooled(payloads, op_class="kv_restore_h2d")
+            self.stats.restored_blocks += len(hits)
+            self.stats.restored_bytes += total
+        return len(hits), total
+
+
+def churn_workload(manager: OffloadManager, *, n_requests: int,
+                   prefix_blocks: int, unique_blocks: int,
+                   block_bytes: int, churn: int = 3) -> OffloadStats:
+    """The §6.2 churn shape: `n_requests` share a `prefix_blocks`-long prefix
+    but the pool only fits one request's working set, so every request evicts
+    its predecessor's pages (churn) and restores the shared prefix.
+
+    Under SPILL_ALL every unique block spills each round (multi-GiB D2H);
+    REUSE_AWARE spills only the shared prefix (seen >= threshold) — MiB scale.
+    """
+    manager.block_bytes = block_bytes
+    prefix = [("prefix", i) for i in range(prefix_blocks)]
+    for r in range(n_requests):
+        uniq = [("req", r, i) for i in range(unique_blocks)]
+        for h in prefix:
+            manager.observe(hash(h))
+        for h in uniq:
+            manager.observe(hash(h))
+        # restore shared prefix if available (warm TTFT path)
+        manager.restore([hash(h) for h in prefix])
+        # request finishes; pool churns: everything evicts
+        for h in prefix + uniq:
+            manager.evict(hash(h), payload_bytes=block_bytes)
+    return manager.stats

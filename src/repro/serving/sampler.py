@@ -1,0 +1,32 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => full distribution
+    max_new_tokens: int = 32
+    stop_token: int = -1            # -1 => length-only stopping
+
+
+def sample(logits: jax.Array, key, params: SamplingParams) -> jax.Array:
+    """logits: (B, 1, V) or (B, V) -> (B,) int32 next tokens."""
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    logits = logits.astype(jnp.float32)
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k:
+        vals, _ = jax.lax.top_k(logits, params.top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits >= cutoff, logits, -1e30)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

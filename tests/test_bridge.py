@@ -1,0 +1,112 @@
+"""Bridge-law unit tests + hypothesis properties (paper §4)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.bridge import (B300, H200, PROFILES, RTX_PRO_6000, TPU_V5E,
+                               BridgeModel, Crossing, Direction, StagingKind)
+
+ALL_PROFILES = list(PROFILES.values())
+
+
+class TestCalibration:
+    """The profiles must reproduce the paper's §4.1 table."""
+
+    def test_b300_sustained_ratios(self):
+        on = BridgeModel(B300, cc_on=True)
+        assert on.sustained_ratio(Direction.H2D, n_contexts=1) == pytest.approx(0.203, rel=0.02)
+        assert on.sustained_ratio(Direction.D2H, n_contexts=1) == pytest.approx(0.211, rel=0.02)
+        assert on.sustained_ratio(Direction.H2D, n_contexts=24) == pytest.approx(0.615, rel=0.02)
+        assert on.sustained_ratio(Direction.D2H, n_contexts=24) == pytest.approx(0.697, rel=0.02)
+
+    def test_compute_and_hbm_parity(self):
+        assert B300.compute_parity == pytest.approx(0.998)
+        assert B300.hbm_parity == pytest.approx(0.912)
+
+    def test_small_copy_floor(self):
+        on = BridgeModel(B300, cc_on=True)
+        t = on.crossing_time(Crossing(32, Direction.D2H, StagingKind.REGISTERED))
+        assert t == pytest.approx(40e-6, rel=0.05)
+
+    def test_fresh_crossing_is_the_44x_class(self):
+        on = BridgeModel(B300, cc_on=True)
+        off = BridgeModel(B300, cc_on=False)
+        c = Crossing(64, Direction.H2D, StagingKind.FRESH)
+        ratio = on.crossing_time(c) / off.crossing_time(c)
+        assert 38 < ratio < 50  # paper: 44x
+
+    def test_cipher_ablation(self):
+        """§4.3: disabling AES-NI collapses bandwidth; VAES-only costs ~3.4%."""
+        no_aesni = BridgeModel(B300, cc_on=True, aesni=False)
+        assert no_aesni.aggregate_bandwidth(Direction.H2D, 24) == pytest.approx(5.5e9)
+        full = BridgeModel(B300, cc_on=True)
+        assert no_aesni.aggregate_bandwidth(Direction.H2D, 24) < \
+            0.2 * full.aggregate_bandwidth(Direction.H2D, 24)
+
+    def test_h200_same_law_different_absolutes(self):
+        """The bridge law is not a Blackwell artifact."""
+        on = BridgeModel(H200, cc_on=True)
+        assert on.sustained_ratio(Direction.H2D) == pytest.approx(10.03 / 55.32, rel=0.03)
+
+
+class TestLawProperties:
+    """Structural invariants of the law — hold for every profile."""
+
+    @given(nbytes=st.integers(1, 1 << 30),
+           profile=st.sampled_from(ALL_PROFILES),
+           direction=st.sampled_from(list(Direction)))
+    @settings(max_examples=60, deadline=None)
+    def test_cc_never_faster(self, nbytes, profile, direction):
+        on = BridgeModel(profile, cc_on=True)
+        off = BridgeModel(profile, cc_on=False)
+        for staging in StagingKind:
+            c = Crossing(nbytes, direction, staging)
+            assert on.crossing_time(c) >= off.crossing_time(c) * 0.99
+
+    @given(n1=st.integers(1, 24), n2=st.integers(1, 24),
+           profile=st.sampled_from(ALL_PROFILES))
+    @settings(max_examples=60, deadline=None)
+    def test_contexts_monotone_and_capped(self, n1, n2, profile):
+        """L4: more contexts never hurt; ceiling always respected."""
+        on = BridgeModel(profile, cc_on=True)
+        if n1 <= n2:
+            assert on.aggregate_bandwidth(Direction.H2D, n1) <= \
+                on.aggregate_bandwidth(Direction.H2D, n2) + 1e-6
+        assert on.aggregate_bandwidth(Direction.H2D, n2) <= \
+            profile.aggregate_ceiling(Direction.H2D) + 1e-6
+
+    @given(streams=st.integers(1, 64), profile=st.sampled_from(ALL_PROFILES))
+    @settings(max_examples=40, deadline=None)
+    def test_streams_flat_under_cc(self, streams, profile):
+        """L1: stream-level 'parallelism' is a fiction under CC (<5% total)."""
+        on = BridgeModel(profile, cc_on=True)
+        t1 = on.stream_scaling(Direction.D2H, 1)
+        tn = on.stream_scaling(Direction.D2H, streams)
+        assert tn >= 0.95 * t1
+
+    @given(small=st.integers(16, 4096), profile=st.sampled_from(ALL_PROFILES))
+    @settings(max_examples=40, deadline=None)
+    def test_toll_dominates_small_crossings(self, small, profile):
+        """L3: for small payloads the toll is orders above the byte cost."""
+        on = BridgeModel(profile, cc_on=True)
+        c = Crossing(small, Direction.H2D, StagingKind.FRESH)
+        byte_time = small / profile.cc_channel_h2d_bw
+        assert on.crossing_time(c) > 50 * byte_time
+
+    @given(n=st.integers(1, 16), nbytes=st.integers(1, 1 << 20),
+           profile=st.sampled_from(ALL_PROFILES))
+    @settings(max_examples=40, deadline=None)
+    def test_batching_beats_many_small(self, n, nbytes, profile):
+        """§8 rule 1: one batched crossing <= n small crossings."""
+        on = BridgeModel(profile, cc_on=True)
+        small = [Crossing(nbytes, Direction.H2D, StagingKind.REGISTERED)] * n
+        batched = Crossing(nbytes * n, Direction.H2D, StagingKind.REGISTERED)
+        assert on.crossing_time(batched) <= on.batch_time(small) + 1e-9
+
+    def test_pool_lifecycle_matches_paper(self):
+        on = BridgeModel(B300, cc_on=True)
+        lc = on.pool_lifecycle_cost(8)
+        assert lc["create"] == pytest.approx(5.20, rel=0.01)
+        assert lc["destroy"] == pytest.approx(3.90, rel=0.01)
+        assert lc["pinned_alloc"] == pytest.approx(0.30, rel=0.01)

@@ -1,0 +1,135 @@
+"""Fabric tenancy (§7) + profiler accounting (§5.2) + channel pool tests."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.accounting import CopyRecord, attribute
+from repro.core.bridge import B300, BridgeModel, Crossing, Direction, StagingKind
+from repro.core.channels import SecureChannelPool, VirtualClock
+from repro.core.fabric import (PARTITION_VOCABULARY, AttestationEvidence,
+                               FabricManager, enumerate_partitions, p2p_bandwidth)
+
+
+class TestFabric:
+    def test_partition_vocabulary_15(self):
+        parts = enumerate_partitions(8)
+        sizes = sorted(p.size for p in parts)
+        assert len(parts) == 15
+        assert sizes.count(8) == 1 and sizes.count(4) == 2
+        assert sizes.count(2) == 4 and sizes.count(1) == 8
+
+    def test_only_vocab_shapes_allocatable(self):
+        fm = FabricManager(B300)
+        with pytest.raises(ValueError):
+            fm.find_partition(3)
+
+    def test_concurrent_tenants_disjoint(self):
+        fm = FabricManager(B300)
+        a = fm.activate("a", 2)
+        b = fm.activate("b", 2)
+        assert not (set(a.visible_devices()) & set(b.visible_devices()))
+        assert fm.check_isolation()["isolated"]
+
+    def test_capacity_exhaustion(self):
+        fm = FabricManager(B300)
+        fm.activate("a", 8)
+        with pytest.raises(RuntimeError):
+            fm.activate("b", 1)
+
+    def test_stale_fm_health_gate(self):
+        """The paper's operational failure mode: stale FM partition state
+        must be a scheduling precondition, not a guest-visible crash."""
+        fm = FabricManager(B300)
+        eight = next(p for p in fm.partitions if p.size == 8)
+        fm.mark_stale(eight.partition_id)
+        with pytest.raises(RuntimeError, match="health gate"):
+            fm.activate("t", 8)
+
+    def test_p2p_two_orders_above_bridge(self):
+        bridge_bw = BridgeModel(B300, cc_on=True).aggregate_bandwidth(Direction.H2D, 1)
+        assert p2p_bandwidth(B300, fabric_up=True) > 40 * bridge_bw
+        assert p2p_bandwidth(B300, fabric_up=False) == pytest.approx(10e6)
+
+    def test_attestation_gap_is_explicit(self):
+        ev = AttestationEvidence()
+        gap = set(ev.gap())
+        assert gap == {"fabric_manager_identity", "fabric_manager_config",
+                       "switch_routing_tables"}
+
+
+class TestAccounting:
+    def test_paper_profile_closes(self):
+        rows = [("alloc_h2d", 1138, 31.7e-6, 1389e-6),
+                ("prealloc", 2628, 25.1e-6, 31.0e-6),
+                ("prep", 260, 18.2e-6, 18.4e-6),
+                ("attn", 192, 27.0e-6, 27.8e-6)]
+        off = [CopyRecord(n, 64, t, False) for n, c, t, _ in rows for _ in range(c)]
+        on = [CopyRecord(n, 64, t, True) for n, c, _, t in rows for _ in range(c)]
+        attr = attribute(off, on, total_gap_s=1.56)
+        assert attr.closure == pytest.approx(0.99, abs=0.03)
+        assert attr.dominant().op_class == "alloc_h2d"
+        assert attr.dominant().per_call_slowdown == pytest.approx(43.8, rel=0.02)
+
+    def test_unpaired_profiles_rejected(self):
+        off = [CopyRecord("x", 64, 1e-5, False)] * 100
+        on = [CopyRecord("x", 64, 1e-5, True)] * 90
+        with pytest.raises(ValueError, match="unpaired"):
+            attribute(off, on, 1.0)
+
+    @given(calls=st.integers(1, 500), off_us=st.floats(1.0, 100.0),
+           slow=st.floats(1.0, 100.0))
+    @settings(max_examples=30, deadline=None)
+    def test_closure_exact_when_profile_is_whole_story(self, calls, off_us, slow):
+        """If the op classes ARE the whole gap, closure == 1."""
+        on_us = off_us * slow
+        off = [CopyRecord("op", 64, off_us * 1e-6, False)] * calls
+        on = [CopyRecord("op", 64, on_us * 1e-6, True)] * calls
+        gap = calls * (on_us - off_us) * 1e-6
+        if gap <= 0:
+            return
+        attr = attribute(off, on, gap)
+        assert attr.closure == pytest.approx(1.0, rel=1e-6)
+
+
+class TestChannelPool:
+    def test_pool_respects_system_channel_limit(self):
+        on = BridgeModel(B300, cc_on=True)
+        with pytest.raises(ValueError, match="channel limit"):
+            SecureChannelPool(on, n_workers=25)
+
+    def test_prewarm_keeps_lifecycle_off_critical_path(self):
+        on = BridgeModel(B300, cc_on=True)
+        clock = VirtualClock()
+        pool = SecureChannelPool(on, 8, clock=clock)
+        pool.prewarm()
+        assert clock.now == 0.0                        # nothing charged
+        pool.submit(Crossing(1 << 20, Direction.H2D, StagingKind.REGISTERED))
+        pool.drain()
+        t_transfer = clock.now
+        pool.teardown(async_=True)
+        assert clock.now == t_transfer                 # async teardown free
+        assert pool.stats.critical_path_lifecycle == 0.0
+
+    def test_non_persistent_pays_lifecycle_per_use(self):
+        on = BridgeModel(B300, cc_on=True)
+        clock = VirtualClock()
+        pool = SecureChannelPool(on, 1, clock=clock, persistent=False)
+        pool.submit(Crossing(1024, Direction.H2D, StagingKind.REGISTERED))
+        # one create + one destroy on the critical path
+        assert clock.now > on.profile.context_create + on.profile.context_destroy
+
+    def test_parallel_channels_beat_single(self):
+        on = BridgeModel(B300, cc_on=True)
+        done = {}
+        for n in (1, 8):
+            clock = VirtualClock()
+            pool = SecureChannelPool(on, n, clock=clock)
+            pool.prewarm()
+            t = 0.0
+            for _ in range(16):
+                t = max(t, pool.submit(
+                    Crossing(256 << 20, Direction.H2D, StagingKind.REGISTERED)))
+            done[n] = t
+        assert done[8] < done[1] / 3

@@ -1,0 +1,86 @@
+"""Scan-aware HLO cost analyzer vs analytic ground truth."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis
+
+
+def compile_and_analyze(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return hlo_analysis.analyze(c.as_text())
+
+
+class TestFlops:
+    def test_single_matmul(self):
+        x = jnp.zeros((256, 256), jnp.float32)
+        r = compile_and_analyze(lambda a, b: a @ b, x, x)
+        assert r["flops"] == pytest.approx(2 * 256 ** 3, rel=0.01)
+
+    def test_scanned_matmul_trip_scaled(self):
+        """The whole reason this module exists: XLA's cost_analysis counts a
+        while body once; ours multiplies by the recovered trip count."""
+        x = jnp.zeros((256, 256), jnp.float32)
+
+        def f(a):
+            y, _ = jax.lax.scan(lambda c, _: (c @ c, None), a, None, length=12)
+            return y
+        r = compile_and_analyze(f, x)
+        assert r["flops"] == pytest.approx(12 * 2 * 256 ** 3, rel=0.02)
+        assert 12 in r["trip_counts"]
+
+    def test_nested_scan(self):
+        x = jnp.zeros((128, 128), jnp.float32)
+
+        def inner(a):
+            y, _ = jax.lax.scan(lambda c, _: (c @ c, None), a, None, length=3)
+            return y
+
+        def f(a):
+            y, _ = jax.lax.scan(lambda c, _: (inner(c), None), a, None, length=5)
+            return y
+        r = compile_and_analyze(f, x)
+        assert r["flops"] == pytest.approx(15 * 2 * 128 ** 3, rel=0.05)
+
+    def test_rectangular_dot_contraction(self):
+        a = jnp.zeros((64, 512), jnp.float32)
+        b = jnp.zeros((512, 32), jnp.float32)
+        r = compile_and_analyze(lambda x, y: x @ y, a, b)
+        assert r["flops"] == pytest.approx(2 * 64 * 512 * 32, rel=0.01)
+
+
+class TestBytes:
+    def test_matmul_bytes(self):
+        x = jnp.zeros((512, 512), jnp.float32)
+        r = compile_and_analyze(lambda a, b: a @ b, x, x)
+        assert r["bytes_accessed"] == pytest.approx(3 * 512 * 512 * 4, rel=0.05)
+
+    def test_scan_bytes_scale_with_trips(self):
+        x = jnp.zeros((256, 256), jnp.float32)
+
+        def f(n):
+            def g(a):
+                y, _ = jax.lax.scan(lambda c, _: (c @ c, None), a, None, length=n)
+                return y
+            return compile_and_analyze(g, x)["bytes_accessed"]
+        assert f(16) > 3 * f(4)
+
+
+class TestMarkedRegions:
+    def test_named_scope_attribution(self):
+        x = jnp.zeros((256, 256), jnp.float32)
+
+        def f(a, b):
+            with jax.named_scope("KERNEL_test_region"):
+                y = a @ b
+            return y + a
+        r = compile_and_analyze(f, x, x)
+        assert "test_region" in r["marked_bytes"]
+        assert r["marked_bytes"]["test_region"] >= 3 * 256 * 256 * 4 * 0.9
+
+
+class TestCollectives:
+    def test_psum_counted(self):
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >1 device (dry-run covers this path)")

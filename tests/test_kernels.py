@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_scan.mlstm_scan import mlstm_scan_kernel
+from repro.kernels.mlstm_scan.ref import mlstm_ref
+from repro.kernels.paged_attention.paged_attention import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol_for(dt):
+    return 3e-2 if dt == jnp.bfloat16 else 2e-4
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,sq,sk,h,kv,d,causal,window", [
+        (2, 128, 128, 4, 2, 64, True, None),
+        (1, 256, 256, 8, 8, 128, True, None),
+        (2, 96, 96, 2, 1, 64, True, 48),      # ragged + sliding window
+        (1, 128, 384, 4, 2, 64, False, None),  # cross-attention shape
+        (3, 64, 64, 6, 2, 32, True, None),
+    ])
+    @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, b, sq, sk, h, kv, d, causal, window, dt):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32).astype(dt)
+        k = jax.random.normal(ks[1], (b, sk, kv, d), jnp.float32).astype(dt)
+        v = jax.random.normal(ks[2], (b, sk, kv, d), jnp.float32).astype(dt)
+        out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                     block_q=64, block_kv=64, interpret=True)
+        ref = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol_for(dt))
+
+    @pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+    def test_block_shape_invariance(self, bq, bk):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 4, 64))
+        k = jax.random.normal(ks[1], (1, 128, 2, 64))
+        v = jax.random.normal(ks[2], (1, 128, 2, 64))
+        out = flash_attention_kernel(q, k, v, causal=True, block_q=bq,
+                                     block_kv=bk, interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("b,h,kv,d,page,pages_max,n_pages", [
+        (2, 4, 2, 64, 16, 4, 16),
+        (3, 8, 8, 128, 32, 3, 12),
+        (1, 4, 1, 64, 8, 6, 8),
+        (4, 2, 2, 32, 8, 5, 24),
+    ])
+    @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, b, h, kv, d, page, pages_max, n_pages, dt):
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(dt)
+        kp = jax.random.normal(ks[1], (n_pages, page, kv, d), jnp.float32).astype(dt)
+        vp = jax.random.normal(ks[2], (n_pages, page, kv, d), jnp.float32).astype(dt)
+        bt = jax.random.randint(ks[3], (b, pages_max), 0, n_pages)
+        lengths = jnp.asarray(
+            [1 + (i * 7 + 5) % (pages_max * page) for i in range(b)], jnp.int32)
+        out = paged_attention_kernel(q, kp, vp, bt, lengths, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, bt, lengths)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol_for(dt))
+
+    def test_short_sequences_skip_pages(self):
+        """lengths < one page must still be exact (masking + pl.when skip)."""
+        ks = jax.random.split(KEY, 4)
+        b, h, kv, d, page, pages_max, n_pages = 2, 4, 2, 64, 16, 4, 8
+        q = jax.random.normal(ks[0], (b, h, d))
+        kp = jax.random.normal(ks[1], (n_pages, page, kv, d))
+        vp = jax.random.normal(ks[2], (n_pages, page, kv, d))
+        bt = jax.random.randint(ks[3], (b, pages_max), 0, n_pages)
+        lengths = jnp.asarray([1, 3], jnp.int32)
+        out = paged_attention_kernel(q, kp, vp, bt, lengths, interpret=True)
+        ref = paged_attention_ref(q, kp, vp, bt, lengths)
+        np.testing.assert_allclose(out, ref, atol=2e-4)
+
+
+class TestMlstmScan:
+    @pytest.mark.parametrize("b,s,h,dk,dv,chunk", [
+        (2, 64, 2, 32, 64, 16),
+        (1, 100, 4, 64, 128, 32),   # ragged tail
+        (2, 128, 2, 32, 64, 128),   # single chunk
+    ])
+    @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+    def test_matches_sequential_oracle(self, b, s, h, dk, dv, chunk, dt):
+        ks = jax.random.split(KEY, 5)
+        q = (jax.random.normal(ks[0], (b, s, h, dk), jnp.float32)
+             / np.sqrt(dk)).astype(dt)
+        k = jax.random.normal(ks[1], (b, s, h, dk), jnp.float32).astype(dt)
+        v = jax.random.normal(ks[2], (b, s, h, dv), jnp.float32).astype(dt)
+        li = jax.random.normal(ks[3], (b, s, h), jnp.float32) * 2.0
+        lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) + 1.0)
+        out = mlstm_scan_kernel(q, k, v, li, lf, chunk=chunk, interpret=True)
+        ref, _ = mlstm_ref(q, k, v, li, lf)
+        # bf16: rare single-element outliers from exponential-gate rounding;
+        # the mean must stay tight
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32),
+            atol=1e-1 if dt == jnp.bfloat16 else 5e-4)
+        mean_err = float(jnp.mean(jnp.abs(
+            out.astype(jnp.float32) - ref.astype(jnp.float32))))
+        assert mean_err < (1e-3 if dt == jnp.bfloat16 else 1e-5)
+
+    def test_chunk_invariance(self):
+        """Different chunkings must agree (state hand-off correctness)."""
+        ks = jax.random.split(KEY, 5)
+        b, s, h, dk, dv = 1, 96, 2, 32, 64
+        q = jax.random.normal(ks[0], (b, s, h, dk)) / np.sqrt(dk)
+        k = jax.random.normal(ks[1], (b, s, h, dk))
+        v = jax.random.normal(ks[2], (b, s, h, dv))
+        li = jax.random.normal(ks[3], (b, s, h))
+        lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)))
+        o16 = mlstm_scan_kernel(q, k, v, li, lf, chunk=16, interpret=True)
+        o48 = mlstm_scan_kernel(q, k, v, li, lf, chunk=48, interpret=True)
+        np.testing.assert_allclose(o16, o48, atol=1e-4)
