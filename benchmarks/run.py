@@ -1,11 +1,21 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV and,
+# with --json, a machine-readable summary (for the BENCH_*.json trajectory).
+import argparse
+import json
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a machine-readable JSON summary")
+    ap.add_argument("--only", metavar="NAME", default=None,
+                    help="run only modules whose title contains NAME")
+    args = ap.parse_args()
+
     from . import (bench_bridge, bench_serving, bench_loader, bench_offload,
-                   bench_fabric, bench_roofline)
+                   bench_fabric, bench_roofline, bench_cluster)
     modules = [
         ("bridge (SS4.1-4.3)", bench_bridge),
         ("serving (SS5.1-5.5)", bench_serving),
@@ -13,17 +23,39 @@ def main() -> None:
         ("offload (SS6.2)", bench_offload),
         ("fabric (SS7)", bench_fabric),
         ("roofline (SSRoofline)", bench_roofline),
+        ("cluster (SS7 x SS4 L4)", bench_cluster),
     ]
+    if args.only:
+        modules = [(t, m) for t, m in modules if args.only in t]
+
     print("name,us_per_call,derived")
     failures = 0
+    rows = []
+    module_status = {}
     for title, mod in modules:
         print(f"# --- {title} ---")
         try:
             for line in mod.run():
                 print(line)
+                name, _, rest = line.partition(",")
+                value, _, derived = rest.partition(",")
+                try:
+                    rows.append({"name": name, "value": float(value),
+                                 "derived": derived})
+                except ValueError:
+                    rows.append({"name": name, "value": None, "derived": rest})
+            module_status[title] = "ok"
         except Exception:
             failures += 1
+            module_status[title] = "error"
             traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "modules": module_status,
+                       "failures": failures}, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,87 @@
+"""Replica-set autoscaler on the virtual clock (paper §4 L4 at fleet scale).
+
+Classic autoscalers read wall-clock queue delay; this one reads the same
+signal off the virtual clock, plus the gateway's per-op-class crossing
+accounting (§5.2) — and that second signal changes the decision rule.  When
+queue delay is high because replicas are *bridge-bound* (crossing time
+dominates their virtual time) and the secure-context budget is exhausted,
+adding a replica is futile: the new replica's context lease is carved out of
+the existing replicas' leases, redistributing bridge bandwidth instead of
+adding it.  The scaler reports BRIDGE_BOUND instead of thrashing — the L4
+law as an autoscaling invariant.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Optional
+
+from .budget import SecureContextBudget
+from .replica import ReplicaMetrics
+
+
+class ScaleDecision(enum.Enum):
+    SCALE_UP = "scale_up"
+    SCALE_DOWN = "scale_down"
+    HOLD = "hold"
+    #: scaling up cannot help: the fleet is bridge-bound and the system-wide
+    #: secure-context budget has nothing left to lease
+    BRIDGE_BOUND = "bridge_bound"
+
+
+@dataclass
+class AutoscalerConfig:
+    high_queue_delay_s: float = 0.25
+    low_queue_delay_s: float = 0.02
+    min_replicas: int = 1
+    max_replicas: int = 8
+    #: fraction of virtual time spent in crossings above which the fleet
+    #: counts as bridge-bound
+    bridge_bound_fraction: float = 0.5
+
+
+class Autoscaler:
+    def __init__(self, budget: SecureContextBudget,
+                 cfg: Optional[AutoscalerConfig] = None):
+        self.budget = budget
+        self.cfg = cfg or AutoscalerConfig()
+        self.decisions: list[dict] = []
+
+    def evaluate(self, metrics: list[ReplicaMetrics]) -> dict:
+        """One scaling decision from a fleet snapshot."""
+        if not metrics:
+            raise ValueError("need metrics for at least one replica")
+        cfg = self.cfg
+        n = len(metrics)
+        mean_delay = sum(m.queue_delay_s for m in metrics) / n
+        total_vt = sum(m.virtual_time_s for m in metrics)
+        total_bridge = sum(m.bridge_time_s for m in metrics)
+        bridge_fraction = total_bridge / total_vt if total_vt > 0 else 0.0
+        op_class: dict[str, float] = {}
+        for m in metrics:
+            for op, secs in m.op_class_seconds.items():
+                op_class[op] = op_class.get(op, 0.0) + secs
+
+        decision, target = ScaleDecision.HOLD, n
+        if mean_delay > cfg.high_queue_delay_s:
+            if n >= cfg.max_replicas:
+                decision = ScaleDecision.HOLD
+            elif (bridge_fraction >= cfg.bridge_bound_fraction
+                  and self.budget.available() < 1):
+                decision = ScaleDecision.BRIDGE_BOUND
+            else:
+                decision, target = ScaleDecision.SCALE_UP, n + 1
+        elif mean_delay < cfg.low_queue_delay_s and n > cfg.min_replicas:
+            decision, target = ScaleDecision.SCALE_DOWN, n - 1
+
+        out = {
+            "decision": decision,
+            "target_replicas": target,
+            "mean_queue_delay_s": mean_delay,
+            "bridge_fraction": bridge_fraction,
+            "op_class_seconds": op_class,
+            "budget_available": self.budget.available(),
+        }
+        self.decisions.append(out)
+        return out

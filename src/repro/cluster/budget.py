@@ -1,0 +1,115 @@
+"""Cluster-wide secure-context budget (paper §4 L4 at fleet scale).
+
+Under GPU-CC, bridge bandwidth is bought with secure copy contexts, and the
+context count is a *system-wide* limit (`BridgeProfile.max_secure_contexts`),
+not a per-process one.  At cluster scale that makes contexts a shared,
+schedulable resource: every replica's channel pool draws a lease from one
+budget, so adding replicas *redistributes* bridge bandwidth across the fleet
+rather than multiplying it.  CC-off there is no secure channel and the budget
+is unconstrained — the CC-mode asymmetry every other layer of this repo
+models, surfacing at the resource-allocation layer.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from repro.core.bridge import BridgeProfile
+
+
+class BudgetExhausted(RuntimeError):
+    """No secure contexts left in the system-wide pool."""
+
+
+@dataclass(frozen=True)
+class ContextLease:
+    """A replica's claim on part of the system-wide secure-context pool."""
+
+    lease_id: int
+    holder: str
+    n_contexts: int
+
+
+class SecureContextBudget:
+    """Tracks secure-context leases against the system-wide channel limit.
+
+    `limit is None` means unconstrained (CC-off: no secure channels exist,
+    so the pool size is a tuning knob, not a scarce resource).
+    """
+
+    def __init__(self, profile: BridgeProfile, *, cc_on: bool = True,
+                 limit: Optional[int] = None):
+        self.profile = profile
+        self.cc_on = cc_on
+        if limit is not None:
+            self.limit: Optional[int] = limit
+        else:
+            self.limit = profile.max_secure_contexts if cc_on else None
+        self._leases: dict[str, ContextLease] = {}
+        self._ids = itertools.count()
+
+    # -- accounting ------------------------------------------------------------------
+
+    def allocated(self) -> int:
+        return sum(l.n_contexts for l in self._leases.values())
+
+    def available(self) -> Union[int, float]:
+        if self.limit is None:
+            return math.inf
+        return self.limit - self.allocated()
+
+    def utilization(self) -> float:
+        if self.limit is None:
+            return 0.0
+        return self.allocated() / self.limit
+
+    def leases(self) -> dict[str, ContextLease]:
+        return dict(self._leases)
+
+    # -- lease lifecycle -------------------------------------------------------------
+
+    def acquire(self, holder: str, requested: int) -> ContextLease:
+        """Grant up to `requested` contexts; partial grants shrink to what is
+        left in the pool.  Raises BudgetExhausted when nothing is left."""
+        if requested < 1:
+            raise ValueError(f"lease needs at least one context, got {requested}")
+        if holder in self._leases:
+            raise ValueError(f"{holder!r} already holds a lease; release it first")
+        if self.limit is None:
+            grant = requested
+        else:
+            avail = self.limit - self.allocated()
+            if avail < 1:
+                raise BudgetExhausted(
+                    f"system-wide secure-context limit ({self.limit}) exhausted "
+                    f"by {len(self._leases)} leaseholders")
+            grant = min(requested, avail)
+        lease = ContextLease(next(self._ids), holder, grant)
+        self._leases[holder] = lease
+        return lease
+
+    def release(self, holder: str) -> None:
+        self._leases.pop(holder, None)
+
+    # -- fleet planning --------------------------------------------------------------
+
+    def fair_share(self, n_holders: int, requested: int) -> list[int]:
+        """Per-holder grants for a fleet of `n_holders` each wanting
+        `requested` contexts: even split of the system-wide limit, capped by
+        the request.  This is the redistribution law — grow the fleet past
+        limit/requested and every member's bridge bandwidth shrinks.
+        """
+        if n_holders < 1:
+            raise ValueError("need at least one holder")
+        if self.limit is None:
+            return [requested] * n_holders
+        if n_holders > self.limit:
+            raise BudgetExhausted(
+                f"{n_holders} replicas cannot each hold a secure context "
+                f"under the system-wide limit ({self.limit})")
+        base, extra = divmod(self.limit, n_holders)
+        shares = [base + (1 if i < extra else 0) for i in range(n_holders)]
+        return [min(requested, s) for s in shares]

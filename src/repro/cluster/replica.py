@@ -1,0 +1,265 @@
+"""One serving replica: engine + scheduler + gateway + offload on a fabric
+tenant partition.
+
+A replica is the unit the cluster schedules.  It owns
+
+  * a fabric `Tenant` (its partition of the 1/2/4/8 vocabulary, §7.1) — the
+    devices it may see, with in-tenant P2P the bridge law never touches,
+  * a `ContextLease` from the cluster-wide `SecureContextBudget` — its share
+    of the system-wide secure copy channels (§4 L4), sizing its gateway's
+    channel pool and therefore its bridge bandwidth,
+  * the full single-node serving stack: `ServingEngine` + `Scheduler` behind
+    one `TransferGateway`, an `OffloadManager` for reuse-aware KV spill
+    (§6.2), and a `PagePool` tracking resident prompt blocks by content hash.
+
+Every crossing is priced on the replica's own virtual clock; replicas run on
+disjoint devices, so cluster makespan is the max over replica clocks.  The
+page pool and host store export content-hash inventories that the router's
+prefix-affinity policy consumes; prompt admission restores warm prefixes from
+the host store (bulk, pooled) and charges prefill compute only for the cold
+tail — the cluster-level form of the §6.2 warm-TTFT recovery.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
+from repro.core.channels import VirtualClock
+from repro.core.fabric import Tenant
+from repro.core.gateway import TransferGateway
+from repro.core.policy import cc_aware_defaults
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import PagePool
+from repro.serving.offload import OffloadManager
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+from .budget import ContextLease
+
+MS = 1e-3
+
+
+def prompt_blocks(prompt: list, block_tokens: int) -> list[tuple]:
+    """Full `block_tokens`-sized token blocks of a prompt (tail excluded) —
+    the content units prefix caching, offload evidence, and routing share."""
+    n_full = len(prompt) // block_tokens
+    return [tuple(prompt[i * block_tokens:(i + 1) * block_tokens])
+            for i in range(n_full)]
+
+
+def prompt_prefix_hashes(prompt: list, block_tokens: int) -> list[int]:
+    """Content hashes of a prompt's full prefix blocks (routing key)."""
+    return [hash(b) for b in prompt_blocks(prompt, block_tokens)]
+
+
+@dataclass
+class ReplicaConfig:
+    max_batch: int = 4
+    max_len: int = 96
+    #: secure contexts the replica would like (the budget may grant fewer)
+    contexts_requested: int = 8
+    #: reuse-evidence threshold for the offload policy (§6.2)
+    store_threshold: int = 2
+    #: tokens per prefix block (page size of the bookkeeping pool)
+    block_tokens: int = 8
+    #: bookkeeping page-pool capacity (pages)
+    n_pages: int = 64
+    #: modeled prefill compute per prompt token, charged to the virtual
+    #: clock at admission (restored prefix tokens skip this charge)
+    prefill_ms_per_token: float = 0.5
+    #: KV payload bytes per token (prices spill/restore crossings)
+    kv_bytes_per_token: int = 8192
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_tokens * self.kv_bytes_per_token
+
+
+@dataclass
+class ReplicaMetrics:
+    """What the autoscaler reads: virtual-clock delay + crossing accounting."""
+
+    replica_id: str
+    queued: int
+    active: int
+    queue_delay_s: float
+    virtual_time_s: float
+    bridge_time_s: float
+    op_class_seconds: dict[str, float] = field(default_factory=dict)
+
+
+class Replica:
+    def __init__(self, replica_id: str, model, tenant: Tenant,
+                 lease: ContextLease, bridge: BridgeModel,
+                 cfg: Optional[ReplicaConfig] = None, *, seed: int = 0):
+        self.replica_id = replica_id
+        self.tenant = tenant
+        self.lease = lease
+        self.bridge = bridge
+        self.cfg = cfg or ReplicaConfig()
+        self.clock = VirtualClock()
+        defaults = cc_aware_defaults(bridge.cc_on,
+                                     concurrency=self.cfg.max_batch)
+        self.gateway = TransferGateway(
+            bridge, defaults, clock=self.clock,
+            pool_workers=max(1, lease.n_contexts))
+        # §6.1 discipline: pay channel-pool creation at provisioning, next to
+        # the tenant's 10-20 s fmpm activation, never on the serving path
+        self.prewarm_seconds = self.gateway.pool.prewarm()
+        self.engine = ServingEngine(
+            model, max_batch=self.cfg.max_batch, max_len=self.cfg.max_len,
+            gateway=self.gateway, policy=defaults.scheduling, bridge=bridge,
+            seed=seed)
+        self.scheduler = Scheduler(self.engine, SchedulerConfig())
+        self.offload = OffloadManager(
+            self.gateway, defaults.offload,
+            store_threshold=max(1, self.cfg.store_threshold
+                                or defaults.store_threshold),
+            block_bytes=self.cfg.block_bytes)
+        self.pages = PagePool(
+            n_pages=self.cfg.n_pages, page_size=self.cfg.block_tokens,
+            n_kv_heads=1, head_dim=1, n_layers=1)
+        self._tables: dict[str, list[int]] = {}
+        self._hashes: dict[str, list[int]] = {}
+        self._reaped = 0
+        self.warm_blocks_restored = 0
+        self.untracked_requests = 0
+
+    # -- admission -------------------------------------------------------------------
+
+    def submit(self, req: Request,
+               prefix_hashes: Optional[list[int]] = None) -> bool:
+        """Admit a request: restore its warm prefix from the host store,
+        charge cold prefill compute, and register its blocks in the pool.
+
+        `prefix_hashes` lets the router pass the hashes it already computed
+        for placement; recomputed here otherwise.
+        """
+        # shed before charging: a rejected request must not touch the clock,
+        # the reuse evidence, or the restore stats
+        if len(self.engine.queue) >= self.scheduler.cfg.max_queue:
+            self.scheduler.rejected += 1
+            return False
+        t0 = self.clock.now
+        blocks = prompt_blocks(req.prompt, self.cfg.block_tokens)
+        hashes = (prefix_hashes if prefix_hashes is not None
+                  else [hash(b) for b in blocks])
+        for h in hashes:
+            self.offload.observe(h)
+        warm = [h for h in hashes if h in self.offload.host_store]
+        if warm:
+            hits, _ = self.offload.restore(warm)
+            self.warm_blocks_restored += hits
+        warm_tokens = len(warm) * self.cfg.block_tokens
+        cold_tokens = max(0, len(req.prompt) - warm_tokens)
+        self.clock.advance(cold_tokens * self.cfg.prefill_ms_per_token * MS)
+        self.scheduler.submit(req)
+        # TTFT window starts at arrival, before the admission-path charges
+        req.enqueue_t = t0
+        self._track_pages(req, blocks, hashes)
+        return True
+
+    def _track_pages(self, req: Request, blocks: list[tuple],
+                     hashes: list[int]) -> None:
+        table = self.pages.allocate(req.request_id, len(req.prompt),
+                                    token_blocks=blocks)
+        if table is None:
+            # pool exhausted: newest requests yield pages first (LIFO);
+            # victims lose their page tracking and will serve untracked
+            victims = self.scheduler.preempt_for_pool(
+                self.pages, len(req.prompt), self._tables)
+            for v in victims:
+                self._hashes.pop(v, None)
+                self.untracked_requests += 1
+            table = self.pages.allocate(req.request_id, len(req.prompt),
+                                        token_blocks=blocks)
+        if table is not None:
+            self._tables[req.request_id] = table
+            self._hashes[req.request_id] = hashes
+        else:
+            # request serves without page bookkeeping: invisible to
+            # prefix-affinity and reuse evidence — count, don't hide it
+            self.untracked_requests += 1
+
+    # -- serving loop ----------------------------------------------------------------
+
+    def tick(self) -> int:
+        stepped = self.scheduler.tick()
+        self._reap()
+        return stepped
+
+    def _reap(self) -> None:
+        """Release finished requests' pages and evict their blocks through
+        the reuse-aware offload policy (the §6.2 churn path)."""
+        done = self.engine.finished
+        for req in done[self._reaped:]:
+            table = self._tables.pop(req.request_id, None)
+            hashes = self._hashes.pop(req.request_id, [])
+            if table is not None:
+                self.pages.release(table)
+            for h in hashes:
+                self.offload.evict(h, payload_bytes=self.cfg.block_bytes)
+        self._reaped = len(done)
+
+    def pending(self) -> int:
+        return len(self.engine.queue) + len(self.engine.active)
+
+    def close(self) -> None:
+        self.engine.close()
+
+    # -- exports the cluster consumes -------------------------------------------------
+
+    def kv_inventory(self) -> set[int]:
+        """Content hashes this replica can serve warm: resident pages plus
+        the offload host store (the router's prefix-affinity key)."""
+        return self.pages.inventory() | self.offload.inventory()
+
+    def bridge_block_cost(self) -> float:
+        """Modeled cost of moving one KV block over this replica's leased
+        channels — the bridge-cost weight in least-loaded routing."""
+        return self.bridge.crossing_time(
+            Crossing(self.cfg.block_bytes, Direction.H2D,
+                     StagingKind.REGISTERED),
+            n_contexts=self.gateway.pool.n_workers)
+
+    def load_score(self) -> float:
+        """Bridge-cost-aware load: pending work weighted by what one unit of
+        it costs here (replicas with smaller leases look more loaded)."""
+        per_req = (self.cfg.prefill_ms_per_token * MS * self.cfg.block_tokens
+                   + self.bridge_block_cost())
+        return self.pending() * per_req
+
+    def queue_delay_s(self) -> float:
+        waits = [self.clock.now - r.enqueue_t for r in self.engine.queue]
+        return float(np.mean(waits)) if waits else 0.0
+
+    def metrics(self) -> ReplicaMetrics:
+        per_op: dict[str, float] = {}
+        for rec in self.gateway.records:
+            per_op[rec.op_class] = per_op.get(rec.op_class, 0.0) + rec.duration_s
+        return ReplicaMetrics(
+            replica_id=self.replica_id,
+            queued=len(self.engine.queue),
+            active=len(self.engine.active),
+            queue_delay_s=self.queue_delay_s(),
+            virtual_time_s=self.clock.now,
+            bridge_time_s=self.gateway.stats.bridge_time_s,
+            op_class_seconds=per_op,
+        )
+
+    def stats(self) -> dict:
+        s = self.engine.stats()
+        s.update(
+            replica_id=self.replica_id,
+            tenant_id=self.tenant.tenant_id,
+            devices=self.tenant.visible_devices(),
+            leased_contexts=self.lease.n_contexts,
+            preemptions=self.scheduler.preemptions,
+            warm_blocks_restored=self.warm_blocks_restored,
+            untracked_requests=self.untracked_requests,
+            offload=self.offload.stats,
+        )
+        return s

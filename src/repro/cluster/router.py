@@ -1,0 +1,187 @@
+"""Cluster front end: admission control + prefix-affinity routing.
+
+The router is the fleet-level form of §8 rule 1 ("treat bridge crossings as
+a scheduled, scarce resource"): the most expensive crossing is the one a
+different placement would have avoided entirely.  Routing policies:
+
+  LEAST_LOADED     bridge-cost-aware least-loaded dispatch: pending work
+                   weighted by each replica's per-block bridge cost (smaller
+                   context leases => costlier blocks => higher load), ties
+                   broken round-robin.
+  PREFIX_AFFINITY  route a request to the replica whose KV/offload inventory
+                   (content hashes exported by PagePool and OffloadManager,
+                   §6.2) overlaps its prompt's prefix blocks; fall back to
+                   least-loaded when nothing matches.  Keeps reuse evidence
+                   concentrated, so warm prefixes restore instead of
+                   recomputing — the cluster-level warm-TTFT lever.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+from repro.core.bridge import TPU_V5E, BridgeModel, BridgeProfile
+from repro.serving.engine import Request
+
+from .budget import SecureContextBudget
+from .replica import Replica, ReplicaConfig, prompt_prefix_hashes
+from .tenant_manager import TenantManager
+
+
+class RoutingPolicy(enum.Enum):
+    LEAST_LOADED = "least_loaded"
+    PREFIX_AFFINITY = "prefix_affinity"
+
+
+class ClusterRouter:
+    def __init__(self, replicas: list[Replica], *,
+                 routing: RoutingPolicy = RoutingPolicy.PREFIX_AFFINITY,
+                 max_cluster_queue: int = 4096,
+                 tenant_manager: Optional[TenantManager] = None,
+                 budget: Optional[SecureContextBudget] = None):
+        if not replicas:
+            raise ValueError("cluster needs at least one replica")
+        self.replicas = replicas
+        self.routing = routing
+        self.max_cluster_queue = max_cluster_queue
+        self.tenant_manager = tenant_manager
+        self.budget = budget
+        self.block_tokens = replicas[0].cfg.block_tokens
+        self.rejected = 0
+        self.affinity_hits = 0
+        #: per accepted request: {request, replica_id, affinity, warm_blocks}
+        self.request_log: list[dict] = []
+        self._rr = 0
+
+    # -- admission + dispatch ---------------------------------------------------------
+
+    def queue_depth(self) -> int:
+        return sum(r.pending() for r in self.replicas)
+
+    def submit(self, req: Request) -> Optional[Replica]:
+        """Admit and place one request; None when the cluster sheds load."""
+        if self.queue_depth() >= self.max_cluster_queue:
+            self.rejected += 1
+            return None
+        hashes = prompt_prefix_hashes(req.prompt, self.block_tokens)
+        replica, affinity, warm = self._route(hashes)
+        if not replica.submit(req, prefix_hashes=hashes):
+            self.rejected += 1
+            return None
+        if affinity:
+            self.affinity_hits += 1
+        self.request_log.append({
+            "request": req, "replica_id": replica.replica_id,
+            "affinity": affinity, "warm_blocks": warm,
+        })
+        return replica
+
+    def _route(self, prefix_hashes: list[int]) -> tuple[Replica, bool, int]:
+        """Returns (replica, affinity_hit, warm_blocks at the chosen one)."""
+        want = set(prefix_hashes)
+        if self.routing is RoutingPolicy.PREFIX_AFFINITY and want:
+            overlaps = [len(want & r.kv_inventory()) for r in self.replicas]
+            best = max(overlaps)
+            if best > 0:
+                tied = [r for r, o in zip(self.replicas, overlaps) if o == best]
+                # among equally-warm replicas, pick the least loaded
+                return min(tied, key=lambda r: r.load_score()), True, best
+        replica = self._least_loaded()
+        warm = len(want & replica.kv_inventory()) if want else 0
+        return replica, False, warm
+
+    def _least_loaded(self) -> Replica:
+        scores = [r.load_score() for r in self.replicas]
+        best = min(scores)
+        tied = [r for r, s in zip(self.replicas, scores) if s <= best + 1e-12]
+        pick = tied[self._rr % len(tied)]
+        self._rr += 1
+        return pick
+
+    # -- serving loop -----------------------------------------------------------------
+
+    def run(self, max_rounds: int = 100_000) -> dict:
+        """Drive every replica round-robin until the cluster drains."""
+        rounds = 0
+        while any(r.pending() for r in self.replicas) and rounds < max_rounds:
+            for r in self.replicas:
+                r.tick()
+            rounds += 1
+        return self.stats()
+
+    def close(self) -> None:
+        for r in self.replicas:
+            r.close()
+            if self.budget is not None:
+                self.budget.release(r.replica_id)
+            if self.tenant_manager is not None:
+                self.tenant_manager.decommission(r.tenant.tenant_id)
+
+    # -- fleet metrics ----------------------------------------------------------------
+
+    def ttfts(self) -> list[dict]:
+        """Per accepted request: TTFT on the virtual clock + placement."""
+        out = []
+        for entry in self.request_log:
+            req = entry["request"]
+            if req.first_token_t is None:
+                continue
+            out.append({
+                "request_id": req.request_id,
+                "replica_id": entry["replica_id"],
+                "affinity": entry["affinity"],
+                "warm_blocks": entry["warm_blocks"],
+                "ttft_s": req.first_token_t - req.enqueue_t,
+            })
+        return out
+
+    def stats(self) -> dict:
+        per_replica = [r.stats() for r in self.replicas]
+        makespan = max(r.clock.now for r in self.replicas)
+        total_tokens = sum(s["total_tokens"] for s in per_replica)
+        iso = (self.tenant_manager.isolation_report()
+               if self.tenant_manager is not None else None)
+        return {
+            "routing": self.routing.value,
+            "n_replicas": len(self.replicas),
+            "finished": sum(s["finished"] for s in per_replica),
+            "total_tokens": total_tokens,
+            "makespan_s": makespan,
+            "tokens_per_s": total_tokens / makespan if makespan > 0 else 0.0,
+            "bridge_time_s": sum(s["bridge_time_s"] for s in per_replica),
+            "rejected": self.rejected,
+            "affinity_hits": self.affinity_hits,
+            "warm_blocks_restored": sum(s["warm_blocks_restored"]
+                                        for s in per_replica),
+            "leased_contexts": [s["leased_contexts"] for s in per_replica],
+            "isolation": iso,
+            "replicas": per_replica,
+        }
+
+
+def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
+                  cc_on: bool = True, n_replicas: int = 2,
+                  partition_size: int = 2,
+                  routing: RoutingPolicy = RoutingPolicy.PREFIX_AFFINITY,
+                  replica_cfg: Optional[ReplicaConfig] = None,
+                  max_cluster_queue: int = 4096,
+                  require_attestation: bool = True,
+                  seed: int = 0) -> ClusterRouter:
+    """Provision a cluster: fabric tenants, fair-share context leases, and
+    one replica per tenant behind a routing front end."""
+    cfg = replica_cfg or ReplicaConfig()
+    tm = TenantManager(profile, cc_on=cc_on)
+    budget = SecureContextBudget(profile, cc_on=cc_on)
+    grants = budget.fair_share(n_replicas, cfg.contexts_requested)
+    replicas = []
+    for i in range(n_replicas):
+        tenant = tm.provision(f"tenant-{i}", partition_size,
+                              require_attestation=require_attestation)
+        lease = budget.acquire(f"replica-{i}", grants[i])
+        bridge = BridgeModel(profile, cc_on=cc_on)
+        replicas.append(Replica(f"replica-{i}", model, tenant, lease, bridge,
+                                cfg, seed=seed + i))
+    return ClusterRouter(replicas, routing=routing,
+                         max_cluster_queue=max_cluster_queue,
+                         tenant_manager=tm, budget=budget)

@@ -76,6 +76,11 @@ class PagePool:
                 meta.token_hash = h
                 self.seen_counts[h] = self.seen_counts.get(h, 0) + 1
                 meta.seen_count = self.seen_counts[h]
+            else:
+                # page reused for unhashed content: drop the previous
+                # occupant's hash or inventory() would advertise stale content
+                meta.token_hash = None
+                meta.seen_count = 0
             table.append(pid)
         return table
 
@@ -88,6 +93,16 @@ class PagePool:
 
     def utilization(self) -> float:
         return 1.0 - len(self.free) / self.n_pages
+
+    def inventory(self) -> set[int]:
+        """Content hashes resident in allocated pages.
+
+        Exported to the cluster router (§6.2): prefix-affinity routing sends
+        a request to the replica whose pool already holds its prompt blocks,
+        so the prefix never re-crosses the bridge.
+        """
+        return {m.token_hash for m in self.meta.values()
+                if m.token_hash is not None and m.request_id is not None}
 
     # -- tensor ops -----------------------------------------------------------------------
 

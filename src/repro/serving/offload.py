@@ -61,6 +61,15 @@ class OffloadManager:
         self.seen_counts[token_hash] = self.seen_counts.get(token_hash, 0) + 1
         return self.seen_counts[token_hash]
 
+    def inventory(self) -> set[int]:
+        """Content hashes restorable from the host store.
+
+        Exported to the cluster router: a replica whose host store holds a
+        request's prefix can serve it warm (MiB-scale restore instead of a
+        full prefill), so prefix-affinity routing prefers it.
+        """
+        return set(self.host_store)
+
     def should_spill(self, token_hash: int) -> bool:
         if self.policy is OffloadPolicy.NO_OFFLOAD:
             return False

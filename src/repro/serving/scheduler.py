@@ -57,6 +57,30 @@ class Scheduler:
             self._handle_straggler()
         return stepped
 
+    def preempt_for_pool(self, pool, n_tokens: int,
+                         tables: dict[str, list[int]]) -> list[str]:
+        """LIFO pool-exhaustion preemption: newest active requests yield
+        their pages first (vLLM semantics) until `n_tokens` fits in `pool`.
+
+        `tables` maps request_id -> page table; preempted entries are popped
+        and their pages released.  Returns the preempted request ids, newest
+        first.  Stops (without destroying the victim's work) when the newest
+        active request holds no pages — preempting it would free nothing.
+        """
+        preempted: list[str] = []
+        while (len(pool.free) < pool.pages_needed(n_tokens)
+               and self.engine.active):
+            newest = max(self.engine.active.values(),
+                         key=lambda r: (r.enqueue_t, r.request_id))
+            table = tables.pop(newest.request_id, None)
+            if table is None:
+                break
+            pool.release(table)
+            self.engine._release(newest, state="preempted")
+            self.preemptions += 1
+            preempted.append(newest.request_id)
+        return preempted
+
     def _handle_straggler(self) -> None:
         """Preempt the newest active request (LIFO) and requeue it."""
         if not self.engine.active:

@@ -1,7 +1,9 @@
 """Bridge-law unit tests + hypothesis properties (paper §4)."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.bridge import (B300, H200, PROFILES, RTX_PRO_6000, TPU_V5E,

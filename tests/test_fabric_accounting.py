@@ -1,8 +1,10 @@
 """Fabric tenancy (§7) + profiler accounting (§5.2) + channel pool tests."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core.accounting import CopyRecord, attribute

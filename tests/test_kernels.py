@@ -104,10 +104,12 @@ class TestMlstmScan:
         out = mlstm_scan_kernel(q, k, v, li, lf, chunk=chunk, interpret=True)
         ref, _ = mlstm_ref(q, k, v, li, lf)
         # bf16: rare single-element outliers from exponential-gate rounding;
-        # the mean must stay tight
+        # f32: chunked vs sequential accumulation order perturbs the last ulp
+        # of large-magnitude outputs, so a small rtol term is needed on top of
+        # the absolute bound; the mean must stay tight either way
         np.testing.assert_allclose(
             out.astype(jnp.float32), ref.astype(jnp.float32),
-            atol=1e-1 if dt == jnp.bfloat16 else 5e-4)
+            rtol=1e-5, atol=1e-1 if dt == jnp.bfloat16 else 5e-4)
         mean_err = float(jnp.mean(jnp.abs(
             out.astype(jnp.float32) - ref.astype(jnp.float32))))
         assert mean_err < (1e-3 if dt == jnp.bfloat16 else 1e-5)

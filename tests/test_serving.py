@@ -79,6 +79,91 @@ class TestEngine:
         assert stats["finished"] == 8
 
 
+class _FakeEngine:
+    """Minimal engine surface for deterministic Scheduler tests."""
+
+    def __init__(self, requests):
+        self.queue = []
+        self.active = {i: r for i, r in enumerate(requests)}
+        for r in self.active.values():
+            r.state = "running"
+        self.released = []
+
+    def step(self):
+        return len(self.active)
+
+    def _release(self, req, *, state="finished"):
+        for slot, r in list(self.active.items()):
+            if r is req:
+                del self.active[slot]
+        req.state = state
+        self.released.append((req.request_id, state))
+        if state != "finished":
+            req.restarts += 1
+            self.queue.append(req)
+
+
+def _running_request(rid, enqueue_t):
+    r = Request(rid, prompt=[1, 2, 3])
+    r.enqueue_t = enqueue_t
+    return r
+
+
+class TestSchedulerPreemption:
+    def test_straggler_preempts_newest_after_patience(self, monkeypatch):
+        """A step slower than straggler_factor x EMA for `patience`
+        consecutive ticks preempts the newest request (LIFO)."""
+        eng = _FakeEngine([_running_request("old", 0.0),
+                           _running_request("new", 5.0)])
+        sched = Scheduler(eng, SchedulerConfig(straggler_factor=4.0,
+                                               patience=2))
+        # perf_counter pairs per tick: 3 fast baseline ticks, then two
+        # escalating stragglers (escalation keeps dt ahead of the EMA)
+        times = iter([0.0, 1.0,           # dt=1     (EMA seed)
+                      2.0, 3.0,           # dt=1
+                      4.0, 5.0,           # dt=1
+                      6.0, 106.0,         # dt=100   slow #1
+                      110.0, 1110.0])     # dt=1000  slow #2 -> preempt
+        monkeypatch.setattr("repro.serving.scheduler.time.perf_counter",
+                            lambda: next(times))
+        for _ in range(5):
+            sched.tick()
+        assert sched.preemptions == 1
+        assert eng.released == [("new", "preempted")]   # newest, not oldest
+        assert eng.queue and eng.queue[0].request_id == "new"
+
+    def test_pool_exhaustion_preempts_lifo(self):
+        """Newest requests yield pages first; oldest survive (vLLM order)."""
+        eng = _FakeEngine([_running_request("r0", 0.0),
+                           _running_request("r1", 1.0),
+                           _running_request("r2", 2.0)])
+        sched = Scheduler(eng)
+        pool = PagePool(n_pages=6, page_size=8, n_kv_heads=1, head_dim=1,
+                        n_layers=1)
+        tables = {rid: pool.allocate(rid, 16) for rid in ("r0", "r1", "r2")}
+        assert not pool.free                      # exhausted
+        victims = sched.preempt_for_pool(pool, n_tokens=32, tables=tables)
+        assert victims == ["r2", "r1"]            # strictly newest-first
+        assert "r0" in tables                     # oldest keeps its pages
+        assert len(pool.free) >= pool.pages_needed(32)
+        assert sched.preemptions == 2
+        assert [rid for rid, st in eng.released] == ["r2", "r1"]
+
+    def test_pool_preemption_stops_without_progress(self):
+        """A pageless newest request ends the scan unharmed: preempting it
+        would free nothing, so its work is not destroyed."""
+        eng = _FakeEngine([_running_request("r0", 0.0)])
+        sched = Scheduler(eng)
+        pool = PagePool(n_pages=2, page_size=8, n_kv_heads=1, head_dim=1,
+                        n_layers=1)
+        pool.allocate("other", 16)                # exhaust with untracked pages
+        victims = sched.preempt_for_pool(pool, n_tokens=64, tables={})
+        assert victims == []
+        assert sched.preemptions == 0
+        assert eng.active                         # r0 keeps running
+        assert not pool.free                      # nothing was recoverable
+
+
 class TestPagePool:
     def test_alloc_release_cycle(self):
         pool = PagePool(n_pages=16, page_size=8, n_kv_heads=2, head_dim=16,

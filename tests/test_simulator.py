@@ -1,7 +1,9 @@
 """Decode-step simulator: paper-table reproduction + structural properties."""
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.bridge import B300, H200, BridgeModel
