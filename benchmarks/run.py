@@ -15,7 +15,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_bridge, bench_serving, bench_loader, bench_offload,
-                   bench_fabric, bench_roofline, bench_cluster)
+                   bench_fabric, bench_roofline, bench_cluster, bench_replay)
     modules = [
         ("bridge (SS4.1-4.3)", bench_bridge),
         ("serving (SS5.1-5.5)", bench_serving),
@@ -24,6 +24,7 @@ def main() -> None:
         ("fabric (SS7)", bench_fabric),
         ("roofline (SSRoofline)", bench_roofline),
         ("cluster (SS7 x SS4 L4)", bench_cluster),
+        ("replay (SS5.2 bridge-tape counterfactuals)", bench_replay),
     ]
     if args.only:
         modules = [(t, m) for t, m in modules if args.only in t]

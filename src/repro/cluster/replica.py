@@ -36,6 +36,8 @@ from repro.serving.engine import Request, ServingEngine
 from repro.serving.kv_cache import PagePool
 from repro.serving.offload import OffloadManager
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.trace.recorder import TraceRecorder
+from repro.trace.tape import BridgeTape
 
 from .budget import ContextLease
 
@@ -109,6 +111,14 @@ class Replica:
         # §6.1 discipline: pay channel-pool creation at provisioning, next to
         # the tenant's 10-20 s fmpm activation, never on the serving path
         self.prewarm_seconds = self.gateway.pool.prewarm()
+        # every replica records its crossing stream: the cluster's evidence
+        # for routing/autoscaling decisions is the same tape the replayer
+        # and conformance checker consume
+        self.recorder = TraceRecorder(
+            self.gateway, policy=defaults.scheduling.value,
+            label=f"replica-{replica_id}",
+            extra={"tenant": tenant.tenant_id,
+                   "leased_contexts": lease.n_contexts}).attach()
         self.engine = ServingEngine(
             model, max_batch=self.cfg.max_batch, max_len=self.cfg.max_len,
             gateway=self.gateway, policy=defaults.scheduling, bridge=bridge,
@@ -208,7 +218,12 @@ class Replica:
         return len(self.engine.queue) + len(self.engine.active)
 
     def close(self) -> None:
+        self.recorder.detach()
         self.engine.close()
+
+    def tape(self) -> BridgeTape:
+        """This replica's crossing trace (replayable, conformance-checkable)."""
+        return self.recorder.tape()
 
     # -- exports the cluster consumes -------------------------------------------------
 
@@ -237,9 +252,7 @@ class Replica:
         return float(np.mean(waits)) if waits else 0.0
 
     def metrics(self) -> ReplicaMetrics:
-        per_op: dict[str, float] = {}
-        for rec in self.gateway.records:
-            per_op[rec.op_class] = per_op.get(rec.op_class, 0.0) + rec.duration_s
+        per_op = self.tape().op_class_seconds()
         return ReplicaMetrics(
             replica_id=self.replica_id,
             queued=len(self.engine.queue),

@@ -21,12 +21,25 @@ US = 1e-6
 
 @dataclass(frozen=True)
 class CopyRecord:
-    """One profiled crossing."""
+    """One profiled crossing.
+
+    The first four fields are the §5.2 accounting-loop minimum; the rest are
+    the bridge-tape extension (trace/tape.py): where the crossing ran and
+    when, so a recorded stream can be replayed, re-priced and checked against
+    the bridge-law invariants.  Defaults keep hand-built accounting records
+    (benchmarks) valid.
+    """
 
     op_class: str       # e.g. "alloc_h2d" (fresh), "prealloc_copy", "prep_pinned"
     nbytes: int
     duration_s: float
     cc_on: bool
+    direction: str = ""         # "h2d" | "d2h" ("" = unknown, pre-tape record)
+    staging: str = ""           # "fresh" | "registered"
+    channel: int = -1           # secure-channel/context id; -1 = engine-serial path
+    t_start: float = 0.0        # virtual-clock interval of the crossing
+    t_end: float = 0.0
+    charged: bool = True        # False: wall-clock charge accounted elsewhere
 
 
 @dataclass

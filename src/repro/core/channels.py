@@ -199,24 +199,35 @@ class SecureChannelPool:
         Under CC the channel serializes (L1): if every channel is busy, the
         crossing queues.  CC-off, channels are effectively unconstrained.
         """
+        return self.submit_ex(crossing, when=when)[2]
+
+    def submit_ex(self, crossing: Crossing, *,
+                  when: Optional[float] = None) -> tuple[int, float, float]:
+        """`submit` plus placement: returns ``(ctx_id, start, done)`` so the
+        caller (the gateway's tape recorder) can attribute the crossing to the
+        secure channel it actually serialized on."""
         t = self.clock.now if when is None else when
         if not self.persistent:
-            # naive variant: pay full lifecycle per crossing, serialized
+            # naive variant: pay full lifecycle per crossing, serialized.
+            # the returned interval covers the transfer only — the destroy
+            # cost hits the clock but is lifecycle, not crossing time
             ctx = self._create_context(on_critical_path=True)
             dur = self.bridge.crossing_time(crossing, n_contexts=1)
+            start = max(self.clock.now, ctx.busy_until)
             done = ctx.submit(self.clock.now, dur, crossing.nbytes)
             self.clock.advance_to(done)
             self._destroy_context(ctx, on_critical_path=True)
             self._count(crossing)
-            return self.clock.now
+            return ctx.ctx_id, start, done
 
         self.ensure_ready()
         ctx = min(self.active_contexts(), key=lambda c: c.busy_until)
         # per-channel bandwidth: each context owns one secure channel
         dur = self.bridge.crossing_time(crossing, n_contexts=1)
+        start = max(t, ctx.busy_until)
         done = ctx.submit(t, dur, crossing.nbytes)
         self._count(crossing)
-        return done
+        return ctx.ctx_id, start, done
 
     def drain(self) -> float:
         """Advance the clock until all in-flight crossings complete."""

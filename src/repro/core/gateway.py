@@ -20,7 +20,7 @@ transfer (the discipline is the same); here it lets every policy be costed.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import numpy as np
@@ -67,6 +67,9 @@ class TransferGateway:
             bridge, n_workers=max(1, pool_workers), clock=self.clock)
         self.stats = GatewayStats()
         self.records: list[CopyRecord] = []
+        #: emit hooks: every finished crossing is pushed to each subscriber
+        #: (trace.TraceRecorder attaches here to build a BridgeTape)
+        self.on_record: list[Callable[[CopyRecord], None]] = []
         self._staging_registered: set[tuple[int, ...]] = set()
 
     # -- staging discipline -----------------------------------------------------------
@@ -90,16 +93,16 @@ class TransferGateway:
         staging = self._staging_kind(np.shape(host_array), reuse_staging=reuse_staging)
         crossing = Crossing(_nbytes(host_array), Direction.H2D, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
-        self.clock.advance(cost)
-        self._record(crossing, cost, op_class)
+        end = self.clock.advance(cost)
+        self._record(crossing, cost, op_class, t_end=end)
         return jax.device_put(np.asarray(host_array), self.device)
 
     def d2h(self, device_array: jax.Array, *, op_class: str = "d2h") -> np.ndarray:
         """One device-to-host crossing (the drain).  Blocking under CC (L2)."""
         crossing = Crossing(_nbytes(device_array), Direction.D2H, StagingKind.REGISTERED)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
-        self.clock.advance(cost)
-        self._record(crossing, cost, op_class)
+        end = self.clock.advance(cost)
+        self._record(crossing, cost, op_class, t_end=end)
         return np.asarray(device_array)
 
     def batch_h2d(self, host_arrays: Sequence[np.ndarray], *,
@@ -117,8 +120,8 @@ class TransferGateway:
         total = sum(_nbytes(a) for a in host_arrays)
         crossing = Crossing(total, Direction.H2D, StagingKind.REGISTERED)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
-        self.clock.advance(cost)
-        self._record(crossing, cost, op_class)
+        end = self.clock.advance(cost)
+        self._record(crossing, cost, op_class, t_end=end)
         self.stats.batched_crossings_saved += len(host_arrays) - 1
         return [jax.device_put(np.asarray(a), self.device) for a in host_arrays]
 
@@ -130,24 +133,60 @@ class TransferGateway:
         before = self.clock.now
         for a in host_arrays:
             crossing = Crossing(_nbytes(a), Direction.H2D, StagingKind.REGISTERED)
-            self.pool.submit(crossing)
+            ctx_id, start, done = self.pool.submit_ex(crossing)
             # per-crossing record carries its single-channel duration; the
             # wall-clock charge comes from the drain below
-            self._record(crossing,
-                         self.bridge.crossing_time(crossing, n_contexts=1),
-                         op_class, charge=False)
+            self._record(crossing, done - start, op_class, charge=False,
+                         channel=ctx_id, t_end=done)
             out.append(jax.device_put(np.asarray(a), self.device))
         self.pool.drain()
         self.stats.bridge_time_s += self.clock.now - before
         return out
 
+    def charge_crossing(self, nbytes: int, direction: Direction, *,
+                        staging: StagingKind = StagingKind.REGISTERED,
+                        op_class: str) -> float:
+        """Price + record a metadata-only crossing (no tensor moves).
+
+        Call sites that account a crossing without materializing its payload
+        (the offload manager's metadata-only spill, the loader's modeled
+        shard transfers) use this instead of hand-rolling stats so the
+        crossing still lands in the tape with a consistent interval.
+        """
+        crossing = Crossing(int(nbytes), direction, staging)
+        cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
+        end = self.clock.advance(cost)
+        self._record(crossing, cost, op_class, t_end=end)
+        return cost
+
+    def record_modeled(self, nbytes: int, direction: Direction, cost: float, *,
+                       op_class: str,
+                       staging: StagingKind = StagingKind.REGISTERED) -> None:
+        """Record a crossing whose cost an external model already computed.
+
+        The pooled loader prices its ladder variants with its own calibrated
+        component model (§6.1); this lets it charge that exact cost while the
+        crossing still lands on the tape with direction/staging/bytes.  The
+        charge always advances the clock — that is what keeps consecutive
+        modeled crossings on non-overlapping intervals (L1/L2).
+        """
+        crossing = Crossing(int(nbytes), direction, staging)
+        end = self.clock.advance(cost)
+        self._record(crossing, cost, op_class, t_end=end)
+
     # -- bookkeeping -------------------------------------------------------------------
 
     def _record(self, crossing: Crossing, cost: float, op_class: str, *,
-                charge: bool = True) -> None:
+                charge: bool = True, channel: int = -1,
+                t_end: Optional[float] = None) -> None:
         """`charge=False` keeps the per-crossing duration in the records (for
         op-class attribution) without adding it to bridge_time_s — used when
-        the wall-clock charge is accounted elsewhere (pooled drain)."""
+        the wall-clock charge is accounted elsewhere (pooled drain).
+
+        `channel` is the secure-context id the crossing serialized on (-1 for
+        the engine-serial path); `t_end` overrides the completion timestamp
+        for pool-scheduled crossings whose interval the pool computed.
+        """
         if crossing.direction is Direction.H2D:
             self.stats.h2d_crossings += 1
             self.stats.h2d_bytes += crossing.nbytes
@@ -156,4 +195,11 @@ class TransferGateway:
             self.stats.d2h_bytes += crossing.nbytes
         if charge:
             self.stats.bridge_time_s += cost
-        self.records.append(CopyRecord(op_class, crossing.nbytes, cost, self.bridge.cc_on))
+        end = self.clock.now if t_end is None else t_end
+        rec = CopyRecord(
+            op_class, crossing.nbytes, cost, self.bridge.cc_on,
+            direction=crossing.direction.value, staging=crossing.staging.value,
+            channel=channel, t_start=end - cost, t_end=end, charged=charge)
+        self.records.append(rec)
+        for hook in self.on_record:
+            hook(rec)

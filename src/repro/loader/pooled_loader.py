@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
 from repro.core.channels import SecureChannelPool, VirtualClock
+from repro.core.gateway import TransferGateway
+from repro.trace import opclasses as oc
 from .sharded_weights import ShardedCheckpoint
 
 GB = 1e9
@@ -68,11 +70,30 @@ class LoaderRates:
 class PooledLoader:
     def __init__(self, bridge: BridgeModel, *, n_workers: int = 8,
                  rates: Optional[LoaderRates] = None,
-                 clock: Optional[VirtualClock] = None):
+                 clock: Optional[VirtualClock] = None,
+                 gateway: Optional[TransferGateway] = None):
         self.bridge = bridge
         self.n_workers = n_workers
         self.rates = rates or LoaderRates()
-        self.clock = clock or VirtualClock()
+        #: optional: when set, per-shard transfer crossings are recorded
+        #: through the gateway (so loads appear on the bridge tape) and the
+        #: loader shares its virtual clock
+        self.gateway = gateway
+        if gateway is not None and clock is not None and clock is not gateway.clock:
+            raise ValueError(
+                "loader clock must be the gateway's clock when both are "
+                "given: the load-time charge is split between the lump "
+                "host-side components and per-shard gateway crossings, and "
+                "splitting it across two clocks undercounts both")
+        if gateway is not None and (
+                gateway.bridge.profile.name != bridge.profile.name
+                or gateway.bridge.cc_on != bridge.cc_on):
+            raise ValueError(
+                f"loader bridge ({bridge.profile.name}, cc_on={bridge.cc_on}) "
+                f"must match the gateway's ({gateway.bridge.profile.name}, "
+                f"cc_on={gateway.bridge.cc_on}): shard crossings are priced "
+                f"by the loader but stamped with the gateway's tape meta")
+        self.clock = clock or (gateway.clock if gateway else VirtualClock())
 
     # -- cost model (virtual clock) -------------------------------------------------------
 
@@ -84,8 +105,11 @@ class PooledLoader:
         single_bw = self.bridge.aggregate_bandwidth(Direction.H2D, 1)
         pool_bw = self.bridge.aggregate_bandwidth(Direction.H2D, self.n_workers)
         lifecycle = self.bridge.pool_lifecycle_cost(self.n_workers)
+        # each shard's first transfer stages through a freshly pinned bounce
+        # buffer: full fresh toll + allocation/registration (the 44x class)
         comp = {"stage": 0.0, "transfer": 0.0, "lifecycle": 0.0,
-                "assemble": 0.0, "toll": n_shards * p.cc_fresh_toll}
+                "assemble": 0.0,
+                "toll": n_shards * (p.cc_fresh_toll + p.cc_fresh_alloc)}
 
         if variant is LoaderVariant.BASELINE:
             comp["stage"] = total_bytes / r.host_stage_rate
@@ -137,7 +161,14 @@ class PooledLoader:
         device = device or jax.devices()[0]
         total = ckpt.total_bytes()
         breakdown = self.modeled_load_time(total, ckpt.n_shards, variant)
-        self.clock.advance(breakdown["total"])
+        # transfer + toll components are charged per shard through the
+        # gateway when one is attached (same total, tape-visible crossings);
+        # host-side components (stage/lifecycle/assemble) stay a lump charge
+        per_shard = breakdown["transfer"] + breakdown["toll"]
+        if self.gateway is not None:
+            self.clock.advance(breakdown["total"] - per_shard)
+        else:
+            self.clock.advance(breakdown["total"])
 
         pool = None
         if variant in (LoaderVariant.POOLED, LoaderVariant.PREWARMED):
@@ -149,8 +180,21 @@ class PooledLoader:
 
         tensors = {}
         for shard in range(ckpt.n_shards):
+            shard_bytes = 0
             for name, arr in ckpt.iter_shard(shard):
+                shard_bytes += int(np.asarray(arr).nbytes)
                 tensors[name] = jax.device_put(arr, device)
+            if self.gateway is not None:
+                # FRESH matches the toll component the cost embeds (fresh
+                # setup + alloc per shard), so replaying a loader tape under
+                # the identity counterfactual re-prices the same toll class
+                frac = shard_bytes / total if total else 1.0 / ckpt.n_shards
+                self.gateway.record_modeled(
+                    shard_bytes, Direction.H2D,
+                    breakdown["transfer"] * frac
+                    + breakdown["toll"] / ckpt.n_shards,
+                    op_class=oc.LOADER_SHARD_H2D,
+                    staging=StagingKind.FRESH)
         if pool is not None:
             pool.teardown(async_=(variant is LoaderVariant.PREWARMED))
         return tensors, breakdown

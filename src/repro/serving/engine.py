@@ -38,6 +38,7 @@ from repro.core.bridge import BridgeModel
 from repro.core.channels import VirtualClock
 from repro.core.gateway import TransferGateway
 from repro.core.policy import RuntimeDefaults, SchedulingPolicy, cc_aware_defaults
+from repro.trace import opclasses as oc
 from repro.models.model import Model
 from .sampler import SamplingParams, sample
 
@@ -117,7 +118,7 @@ class ServingEngine:
                 if item is None:
                     return
                 arr, cb = item
-                host = self.gateway.d2h(arr, op_class="worker_drain")
+                host = self.gateway.d2h(arr, op_class=oc.WORKER_DRAIN)
                 cb(host)
         self._worker = threading.Thread(target=loop, daemon=True)
         self._worker.start()
@@ -145,14 +146,14 @@ class ServingEngine:
         prompt = np.asarray(req.prompt, np.int32)[None]     # (1, P)
         # prompt upload crosses the bridge (registered: steady-state serving
         # reuses the prompt staging buffer)
-        self.gateway.h2d(prompt, op_class="prompt_h2d")
+        self.gateway.h2d(prompt, op_class=oc.PROMPT_H2D)
         batch = {"tokens": jnp.asarray(prompt)}
         logits, pre_cache, idx0 = self.model.prefill(
             self.params, batch, max_len=self.max_len)
         self._insert_slot_cache(pre_cache, slot)
         self.key, sk = jax.random.split(self.key)
         first = sample(logits, sk, req.sampling)
-        tok = int(self.gateway.d2h(first, op_class="sample_d2h")[0])
+        tok = int(self.gateway.d2h(first, op_class=oc.SAMPLE_D2H)[0])
         req.output_tokens.append(tok)
         req.first_token_t = self.clock.now
         req.state = "running"
@@ -219,9 +220,9 @@ class ServingEngine:
         if self.policy is SchedulingPolicy.ASYNC_OVERLAP:
             # vLLM async path: fresh pinned staging per step (the 44x class)
             for arr in small_inputs:
-                self.gateway.h2d(arr, op_class="alloc_h2d", reuse_staging=False)
+                self.gateway.h2d(arr, op_class=oc.ALLOC_H2D, reuse_staging=False)
         else:
-            self.gateway.batch_h2d(small_inputs, op_class="prep_batched_h2d")
+            self.gateway.batch_h2d(small_inputs, op_class=oc.PREP_BATCHED_H2D)
 
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(index))
@@ -237,8 +238,8 @@ class ServingEngine:
             done.wait()
             host_tokens = result["h"]
         else:
-            op = ("drain_d2h_nonblocking"
-                  if self.policy is SchedulingPolicy.ASYNC_OVERLAP else "drain_d2h")
+            op = (oc.DRAIN_D2H_NONBLOCKING
+                  if self.policy is SchedulingPolicy.ASYNC_OVERLAP else oc.DRAIN_D2H)
             host_tokens = self.gateway.d2h(next_tokens, op_class=op)
 
         self.trace.append(StepTrace(

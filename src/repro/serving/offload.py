@@ -20,8 +20,10 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.bridge import Direction
 from repro.core.gateway import TransferGateway
 from repro.core.policy import OffloadPolicy
+from repro.trace import opclasses as oc
 
 
 @dataclass
@@ -93,16 +95,12 @@ class OffloadManager:
             self.stats.skipped_blocks += 1
             return False
         if payload is not None:
-            self.gateway.d2h(payload, op_class="kv_spill_d2h")
+            self.gateway.d2h(payload, op_class=oc.KV_SPILL_D2H)
         else:
-            from repro.core.bridge import Crossing, Direction, StagingKind
-            cost = self.gateway.bridge.crossing_time(
-                Crossing(nbytes, Direction.D2H, StagingKind.REGISTERED),
-                n_contexts=self.gateway.pool.n_workers)
-            self.gateway.clock.advance(cost)
-            self.gateway.stats.d2h_crossings += 1
-            self.gateway.stats.d2h_bytes += nbytes
-            self.gateway.stats.bridge_time_s += cost
+            # metadata-only spill: priced + recorded like any crossing so it
+            # still appears on the bridge tape
+            self.gateway.charge_crossing(nbytes, Direction.D2H,
+                                         op_class=oc.KV_SPILL_D2H)
         self.host_store[token_hash] = HostBlock(
             token_hash, nbytes, self.seen_counts.get(token_hash, 0), payload)
         self.stats.spilled_blocks += 1
@@ -122,7 +120,7 @@ class OffloadManager:
         if hits:
             payloads = [b.payload if b.payload is not None
                         else np.zeros(b.payload_bytes, np.uint8) for b in hits]
-            self.gateway.bulk_h2d_pooled(payloads, op_class="kv_restore_h2d")
+            self.gateway.bulk_h2d_pooled(payloads, op_class=oc.KV_RESTORE_H2D)
             self.stats.restored_blocks += len(hits)
             self.stats.restored_bytes += total
         return len(hits), total

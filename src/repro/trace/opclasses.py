@@ -1,0 +1,39 @@
+"""Canonical op-class vocabulary for bridge crossings (paper §5.2).
+
+Every call site that moves bytes through the TransferGateway tags the
+crossing with one of these classes; the tape replayer and the conformance
+checker key their per-class attribution and policy rewrites on them.  Keep
+the strings stable — they are part of the bridge-tape/v1 format and appear
+in checked-in golden tapes (tests/golden/).
+"""
+
+from __future__ import annotations
+
+# -- serving engine (per decode step) ------------------------------------------------
+#: fresh-staging per-step input upload — the paper's 44x `aten::_to_copy` class
+ALLOC_H2D = "alloc_h2d"
+#: batched per-step input upload (one registered crossing for all small inputs)
+PREP_BATCHED_H2D = "prep_batched_h2d"
+#: prompt upload at prefill admission
+PROMPT_H2D = "prompt_h2d"
+#: first-token drain at prefill
+SAMPLE_D2H = "sample_d2h"
+#: per-step output drain, sync (blocking by design)
+DRAIN_D2H = "drain_d2h"
+#: per-step output drain issued "non-blocking" (blocks anyway under CC — L2)
+DRAIN_D2H_NONBLOCKING = "drain_d2h_nonblocking"
+#: per-step output drain executed on a worker thread (v10c)
+WORKER_DRAIN = "worker_drain"
+
+# -- KV offload (§6.2) ----------------------------------------------------------------
+KV_SPILL_D2H = "kv_spill_d2h"
+KV_RESTORE_H2D = "kv_restore_h2d"
+
+# -- loader (§6.1) --------------------------------------------------------------------
+LOADER_SHARD_H2D = "loader_shard_h2d"
+
+#: classes whose crossings are per-step input preparation (candidates for
+#: batching into one registered crossing in a counterfactual replay).  The
+#: worker-offloadable drain set lives in replay.WORKER_OFFLOADABLE — it is a
+#: replay-policy decision (sample_d2h stays synchronous under every policy).
+PREP_CLASSES = frozenset({ALLOC_H2D, PREP_BATCHED_H2D})

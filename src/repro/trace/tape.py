@@ -1,0 +1,172 @@
+"""BridgeTape — the versioned, replayable crossing trace (the repo's §5.2).
+
+A tape is the full crossing stream of one run: per crossing the op class,
+direction, byte count, staging kind, secure channel, and virtual-clock
+interval, plus metadata describing the discipline the stream was recorded
+under (bridge profile, CC mode, scheduling policy, channel-pool width).
+
+The tape is the discriminating evidence for every policy claim in this
+repo: benchmarks re-price tapes under counterfactual disciplines
+(replay.py) instead of re-running engines, regression tests pin the
+crossing stream itself (tests/golden/), and the conformance checker
+asserts the bridge-law invariants over any tape (conformance.py).
+
+Format versioning (see DESIGN.md §5): ``format`` is ``bridge-tape/v<N>``.
+Additive, default-carrying fields do not bump N; any change that alters the
+meaning of an existing field or removes one does, and ``from_dict`` refuses
+tapes from a different major version rather than misreading them.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Iterable, Optional
+
+from repro.core.accounting import CopyRecord
+
+TAPE_FORMAT = "bridge-tape/v1"
+
+
+class TapeFormatError(ValueError):
+    """Raised when a serialized tape is not a readable bridge-tape version."""
+
+
+@dataclass(frozen=True)
+class TapeRecord:
+    """One crossing on the tape (the serializable form of a CopyRecord)."""
+
+    op_class: str
+    direction: str          # "h2d" | "d2h"
+    nbytes: int
+    staging: str            # "fresh" | "registered"
+    channel: int            # secure-channel/context id; -1 = engine-serial path
+    t_start: float
+    t_end: float
+    charged: bool = True
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end - self.t_start
+
+    @classmethod
+    def from_copy_record(cls, rec: CopyRecord) -> "TapeRecord":
+        return cls(op_class=rec.op_class, direction=rec.direction,
+                   nbytes=rec.nbytes, staging=rec.staging, channel=rec.channel,
+                   t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TapeRecord":
+        return cls(op_class=d["op_class"], direction=d["direction"],
+                   nbytes=int(d["nbytes"]), staging=d["staging"],
+                   channel=int(d["channel"]), t_start=float(d["t_start"]),
+                   t_end=float(d["t_end"]), charged=bool(d.get("charged", True)))
+
+
+@dataclass(frozen=True)
+class TapeMeta:
+    """The discipline the stream was recorded under."""
+
+    profile: str            # BridgeProfile name, key into bridge.PROFILES
+    cc_on: bool
+    policy: str = ""        # SchedulingPolicy.value ("" when not engine-driven)
+    pool_workers: int = 1
+    label: str = ""
+    extra: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TapeMeta":
+        return cls(profile=d["profile"], cc_on=bool(d["cc_on"]),
+                   policy=d.get("policy", ""),
+                   pool_workers=int(d.get("pool_workers", 1)),
+                   label=d.get("label", ""), extra=dict(d.get("extra", {})))
+
+
+@dataclass
+class BridgeTape:
+    meta: TapeMeta
+    records: list[TapeRecord] = field(default_factory=list)
+    format: str = TAPE_FORMAT
+
+    # -- summary views (what golden tests pin) ---------------------------------------
+
+    def n_crossings(self) -> int:
+        return len(self.records)
+
+    def total_bytes(self) -> int:
+        return sum(r.nbytes for r in self.records)
+
+    def total_recorded_s(self) -> float:
+        """Sum of per-crossing durations (serialized bridge time)."""
+        return sum(r.duration_s for r in self.records)
+
+    def charged_s(self) -> float:
+        """Durations charged to the recording clock's critical path."""
+        return sum(r.duration_s for r in self.records if r.charged)
+
+    def op_class_mix(self) -> dict[str, int]:
+        mix: dict[str, int] = {}
+        for r in self.records:
+            mix[r.op_class] = mix.get(r.op_class, 0) + 1
+        return mix
+
+    def op_class_seconds(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.op_class] = out.get(r.op_class, 0.0) + r.duration_s
+        return out
+
+    def wall_span_s(self) -> float:
+        if not self.records:
+            return 0.0
+        return (max(r.t_end for r in self.records)
+                - min(r.t_start for r in self.records))
+
+    def select(self, op_classes: Iterable[str]) -> "BridgeTape":
+        keep = frozenset(op_classes)
+        return BridgeTape(meta=self.meta,
+                          records=[r for r in self.records
+                                   if r.op_class in keep])
+
+    # -- serialization ------------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {"format": self.format, "meta": self.meta.to_dict(),
+                "records": [r.to_dict() for r in self.records]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BridgeTape":
+        fmt = d.get("format", "")
+        prefix, _, version = fmt.rpartition("/v")
+        if prefix != "bridge-tape" or not version.isdigit():
+            raise TapeFormatError(f"not a bridge tape: format={fmt!r}")
+        if int(version) != 1:
+            raise TapeFormatError(
+                f"unsupported tape version {fmt!r} (this reader speaks "
+                f"{TAPE_FORMAT}); regenerate the tape — see DESIGN.md §5")
+        return cls(meta=TapeMeta.from_dict(d["meta"]),
+                   records=[TapeRecord.from_dict(r) for r in d["records"]],
+                   format=fmt)
+
+    def to_json(self, *, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "BridgeTape":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "BridgeTape":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -1,3 +1,37 @@
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import os
+import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.trace.harness import GOLDEN
+
+#: the one seed shared by engine/cluster tests and the golden bridge tapes
+#: (tests/golden/) — taken from the golden workload itself so regenerated
+#: tapes, in-test recordings and engine regression runs all sample the same
+#: streams
+GOLDEN_SEED = GOLDEN["seed"]
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture
+def deterministic_seed():
+    """Seed every ambient RNG and hand the seed to the test.
+
+    Engine/cluster tests pass this to ``ServingEngine(seed=...)`` /
+    ``Replica(seed=...)`` so recorded crossing streams (and therefore golden
+    tapes) are byte-stable across runs and machines: jax PRNG keys are
+    derived from the seed, numpy's global state is pinned, and the virtual
+    clock arithmetic is pure.
+    """
+    np.random.seed(GOLDEN_SEED)
+    return GOLDEN_SEED
+
+
+@pytest.fixture(scope="session")
+def golden_dir():
+    return GOLDEN_DIR

@@ -1,0 +1,34 @@
+"""Regenerate the checked-in golden bridge tapes.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Only run this when a scheduling policy *intentionally* changes its crossing
+behavior; review the diff of the tapes like code (crossing counts, op-class
+mix and totals are the regression surface).  See DESIGN.md §5.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+from repro.trace.conformance import assert_conformant
+from repro.trace.harness import GOLDEN_TAPE_FILES, record_golden_tape, smoke_model
+
+
+def main() -> None:
+    out_dir = os.path.dirname(os.path.abspath(__file__))
+    model = smoke_model()
+    for policy, filename in GOLDEN_TAPE_FILES.items():
+        tape = record_golden_tape(policy, model=model)
+        assert_conformant(tape)
+        path = os.path.join(out_dir, filename)
+        tape.save(path)
+        print(f"{filename}: {tape.n_crossings()} crossings, "
+              f"{tape.total_recorded_s():.6f}s, mix={tape.op_class_mix()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -300,11 +300,13 @@ class TestClusterEndToEnd:
         assert ttfts["r4"]["ttft_s"] < ttfts["r0"]["ttft_s"]
         cluster.close()
 
-    def test_cluster_determinism_across_runs(self, tiny_model):
+    def test_cluster_determinism_across_runs(self, tiny_model,
+                                             deterministic_seed):
         def outputs():
             cluster = build_cluster(tiny_model, cc_on=True, n_replicas=2,
                                     partition_size=2,
-                                    routing=RoutingPolicy.PREFIX_AFFINITY)
+                                    routing=RoutingPolicy.PREFIX_AFFINITY,
+                                    seed=deterministic_seed)
             for i in range(3):
                 cluster.submit(Request(
                     f"r{i}", prompt=list(range(1, 17)) + [70 + i] * 8,
@@ -316,3 +318,38 @@ class TestClusterEndToEnd:
             return toks, placement
 
         assert outputs() == outputs()
+
+    def test_replica_tapes_are_exported_and_conformant(self, tiny_model,
+                                                       deterministic_seed):
+        """Every replica's crossing stream is a replayable, law-abiding
+        tape — the cluster-level form of the §5.2 evidence."""
+        from repro.trace import TraceReplayer, ReplaySpec, check_tape
+        cluster = build_cluster(tiny_model, cc_on=True, n_replicas=2,
+                                partition_size=2,
+                                routing=RoutingPolicy.PREFIX_AFFINITY,
+                                seed=deterministic_seed)
+        prefix = list(range(1, 17))
+        for i in range(4):
+            cluster.submit(Request(f"r{i}", prompt=prefix + [40 + i] * 8,
+                                   sampling=SamplingParams(max_new_tokens=2)))
+            cluster.run()
+        tapes = [r.tape() for r in cluster.replicas]
+        served = [t for t in tapes if t.n_crossings()]
+        assert served
+        for replica, tape in zip(cluster.replicas, tapes):
+            assert tape.meta.label == f"replica-{replica.replica_id}"
+            assert tape.meta.pool_workers == replica.lease.n_contexts
+            report = check_tape(tape)
+            assert report.ok, report.format()
+            # metrics' per-op-class accounting is the tape's view
+            assert replica.metrics().op_class_seconds == tape.op_class_seconds()
+        # the spill/restore classes of the churn path appear on the tape
+        mix = {}
+        for t in served:
+            for k, v in t.op_class_mix().items():
+                mix[k] = mix.get(k, 0) + v
+        assert "kv_spill_d2h" in mix
+        # replica tapes re-price like any other tape (CC tax is positive)
+        result = TraceReplayer(served[0]).reprice(ReplaySpec(cc_on=False))
+        assert result.gap_s > 0
+        cluster.close()

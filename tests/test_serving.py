@@ -36,12 +36,14 @@ class TestEngine:
             assert stats["finished"] == 6
             assert stats["total_tokens"] == 36
 
-    def test_deterministic_outputs_across_policies(self, tiny_model):
+    def test_deterministic_outputs_across_policies(self, tiny_model,
+                                                   deterministic_seed):
         """Scheduling policy changes timing, never tokens."""
         outs = {}
         for pol in (SP.SYNC_DRAIN, SP.ASYNC_OVERLAP):
             eng = ServingEngine(tiny_model, max_batch=2, max_len=64,
-                                policy=pol, cc_on=True, seed=7)
+                                policy=pol, cc_on=True,
+                                seed=deterministic_seed)
             eng.submit(Request("r0", prompt=[5, 6, 7],
                                sampling=SamplingParams(max_new_tokens=8)))
             eng.run()

@@ -1,0 +1,106 @@
+"""Property-based tests for the gateway staging-kind state machine.
+
+The §5.2 result hangs on the staging discipline: the first crossing of a
+buffer shape stages FRESH (pays the bounce-buffer toll), a drained reuse
+path transitions that shape to REGISTERED, and non-reuse paths (the vLLM
+async pattern) never register anything.  Previously this machine was only
+exercised indirectly through engine runs; these properties pin it directly.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.bridge import TPU_V5E, BridgeModel, StagingKind
+from repro.core.gateway import TransferGateway
+from repro.core.policy import cc_aware_defaults
+from repro.trace import TraceRecorder
+
+
+def _gateway():
+    return TransferGateway(BridgeModel(TPU_V5E, cc_on=True),
+                           cc_aware_defaults(True), pool_workers=1)
+
+
+#: a small universe of shapes so reuse actually occurs in generated streams
+SHAPES = [(1,), (4,), (2, 3), (8,), (4, 4)]
+
+ops = st.lists(st.tuples(st.sampled_from(range(len(SHAPES))), st.booleans()),
+               min_size=1, max_size=30)
+
+
+class TestStagingStateMachine:
+    @settings(max_examples=25, deadline=None)
+    @given(stream=ops)
+    def test_matches_reference_machine(self, stream):
+        """Gateway staging decisions == the documented reference machine:
+        FRESH on first sight, REGISTERED only after a drained reuse touch."""
+        gw = _gateway()
+        registered: set[tuple] = set()
+        for shape_i, reuse in stream:
+            shape = SHAPES[shape_i]
+            gw.h2d(np.zeros(shape, np.int8), reuse_staging=reuse)
+            rec = gw.records[-1]
+            expected = (StagingKind.REGISTERED if reuse and shape in registered
+                        else StagingKind.FRESH)
+            assert rec.staging == expected.value, (shape, reuse, registered)
+            if reuse:
+                registered.add(shape)
+
+    @settings(max_examples=25, deadline=None)
+    @given(stream=ops)
+    def test_first_sight_of_a_shape_is_always_fresh(self, stream):
+        gw = _gateway()
+        seen: set[tuple] = set()
+        for shape_i, reuse in stream:
+            shape = SHAPES[shape_i]
+            gw.h2d(np.zeros(shape, np.int8), reuse_staging=reuse)
+            if shape not in seen:
+                assert gw.records[-1].staging == StagingKind.FRESH.value
+                seen.add(shape)
+
+    @settings(max_examples=25, deadline=None)
+    @given(shapes=st.lists(st.sampled_from(range(len(SHAPES))), min_size=1,
+                           max_size=30))
+    def test_non_reuse_paths_never_register(self, shapes):
+        """The async pattern (reuse_staging=False) pays FRESH forever — no
+        crossing may flip a shape to REGISTERED, even after repeats."""
+        gw = _gateway()
+        for shape_i in shapes:
+            gw.h2d(np.zeros(SHAPES[shape_i], np.int8), reuse_staging=False)
+        assert all(r.staging == StagingKind.FRESH.value for r in gw.records)
+        # and the machine retained no registration state
+        repeat = SHAPES[shapes[0]]
+        gw.h2d(np.zeros(repeat, np.int8), reuse_staging=True)
+        assert gw.records[-1].staging == StagingKind.FRESH.value
+
+    @settings(max_examples=15, deadline=None)
+    @given(stream=ops)
+    def test_recorded_tape_is_always_conformant(self, stream):
+        """Any h2d stream the gateway produces satisfies the bridge law."""
+        from repro.trace.conformance import check_tape
+        gw = _gateway()
+        with TraceRecorder(gw, label="property") as rec:
+            for shape_i, reuse in stream:
+                gw.h2d(np.zeros(SHAPES[shape_i], np.int8), reuse_staging=reuse)
+        report = check_tape(rec.tape())
+        assert report.ok, report.format()
+
+    @settings(max_examples=15, deadline=None)
+    @given(stream=ops)
+    def test_registered_reuse_is_strictly_cheaper(self, stream):
+        """Once registered, a shape's warm crossing undercuts its fresh one
+        (the toll is a property of the staging path, not the bytes)."""
+        gw = _gateway()
+        fresh_cost: dict[tuple, float] = {}
+        for shape_i, reuse in stream:
+            shape = SHAPES[shape_i]
+            gw.h2d(np.zeros(shape, np.int8), reuse_staging=reuse)
+            rec = gw.records[-1]
+            if rec.staging == StagingKind.FRESH.value:
+                fresh_cost[shape] = rec.duration_s
+            else:
+                assert rec.duration_s < fresh_cost[shape] / 10
