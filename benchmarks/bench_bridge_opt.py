@@ -1,0 +1,212 @@
+"""bridge_opt ablation ladder: arena x coalescer x pipelined restore.
+
+One real engine workload on the B300 CC-on profile, run under the
+vLLM-default discipline (ASYNC_OVERLAP — the paper's degraded baseline),
+then re-run with the transfer-optimization subsystem enabled rung by rung:
+
+  all_off          fresh staging per small crossing (the 44x class)
+  coalescer        sub-threshold crossings fuse; flush buffers first-touch
+  arena_coalescer  flush buffers come from the budgeted staging arena
+  all_on           arena prewarmed + pipelined chunked KV restore
+
+The gold reference is the all_off crossing stream re-priced CC-off
+(TraceReplayer — the §5.2 method, never a second noisy run).  The headline
+row is the recovered fraction of the modeled dense-decode CC gap, checked
+against the paper's 57% (scheduling flag) / 92% (worker drain) recovery
+ladder; the attribution row asserts the fresh-staging share of each rung's
+tape strictly decreases down the ladder — the subsystem removes exactly
+the op class the paper says closes the gap.
+
+An `arena`-only variant (outside the strict ladder) provides the
+uncoalesced-but-staged decode baseline for the CI perf guardrail:
+coalesced decode bridge time must never exceed it.
+"""
+
+from __future__ import annotations
+
+from repro.core.bridge import B300, BridgeModel
+from repro.core.policy import (OffloadPolicy, RuntimeDefaults,
+                               SchedulingPolicy as SP)
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.offload import HostBlock, OffloadManager
+from repro.serving.sampler import SamplingParams
+from repro.trace import ReplaySpec, TraceRecorder, TraceReplayer, check_tape
+from repro.trace.harness import smoke_model
+
+#: the fixed ablation workload (decode phase)
+N_REQUESTS = 6
+MAX_NEW_TOKENS = 8
+MAX_BATCH = 4
+PROMPT = (1, 2, 3)
+
+#: the restore phase: a warm prefix restored through the same gateway
+RESTORE_BLOCKS = 48
+BLOCK_BYTES = 128 << 10
+RESTORE_CHUNK_BYTES = 256 << 10
+
+ARENA_BYTES = 64 << 20
+
+#: strict ladder order for the fresh-share monotonicity claim
+LADDER = ["all_off", "coalescer", "arena_coalescer", "all_on"]
+
+VARIANTS = {
+    # name -> (arena_bytes, prewarm_arena, coalesce, pipelined_restore)
+    "all_off": (0, False, False, False),
+    "coalescer": (0, False, True, False),
+    "arena": (ARENA_BYTES, False, False, False),
+    "arena_coalescer": (ARENA_BYTES, False, True, False),
+    "all_on": (ARENA_BYTES, True, True, True),
+}
+
+
+def _defaults(arena_bytes: int, coalesce: bool, pipelined: bool) -> RuntimeDefaults:
+    return RuntimeDefaults(
+        scheduling=SP.ASYNC_OVERLAP,
+        offload=OffloadPolicy.REUSE_AWARE,
+        store_threshold=2,
+        loader_pool_workers=8,
+        loader_prewarm=True,
+        batch_small_crossings=False,
+        staging_arena_bytes=arena_bytes,
+        coalesce_small_crossings=coalesce,
+        pipelined_restore=pipelined,
+    )
+
+
+def run_variant(model, name: str) -> dict:
+    arena_bytes, prewarm, coalesce, pipelined = VARIANTS[name]
+    engine = ServingEngine(
+        model, max_batch=MAX_BATCH, max_len=64,
+        policy=SP.ASYNC_OVERLAP,
+        bridge=BridgeModel(B300, cc_on=True),
+        defaults=_defaults(arena_bytes, coalesce, pipelined), seed=0)
+    gw = engine.gateway
+    gw.pool.prewarm()    # channel lifecycle off the critical path (§6.1)
+    if prewarm and gw.arena is not None:
+        # pin the classes the workload touches before it starts: the fully
+        # disciplined runtime has no first-touch FRESH crossings at all
+        gw.arena.prewarm([64, 128, 256,
+                          engine.coalescer.watermark_bytes
+                          if engine.coalescer else 256])
+    recorder = TraceRecorder(gw, policy=SP.ASYNC_OVERLAP.value,
+                             label=f"bridge_opt-{name}").attach()
+    try:
+        for i in range(N_REQUESTS):
+            engine.submit(Request(
+                f"r{i}", prompt=list(PROMPT),
+                sampling=SamplingParams(max_new_tokens=MAX_NEW_TOKENS)))
+        engine.run()
+        decode_s = gw.stats.bridge_time_s
+
+        mgr = OffloadManager(
+            gw, OffloadPolicy.REUSE_AWARE,
+            coalescer=engine.coalescer,
+            pipelined_restore=pipelined,
+            restore_chunk_bytes=RESTORE_CHUNK_BYTES)
+        for b in range(RESTORE_BLOCKS):
+            mgr.host_store[b] = HostBlock(b, BLOCK_BYTES, 2, None)
+        mgr.restore(list(range(RESTORE_BLOCKS)))
+        if engine.coalescer is not None:
+            engine.coalescer.barrier()
+        restore_s = gw.stats.bridge_time_s - decode_s
+        tape = recorder.tape()
+    finally:
+        recorder.detach()
+        engine.close()
+    return {
+        "decode_s": decode_s,
+        "restore_s": restore_s,
+        "total_s": gw.stats.bridge_time_s,
+        "tape": tape,
+        "fresh_share": tape.fresh_share(),
+        "arena": gw.arena.stats_dict() if gw.arena is not None else None,
+        "coalescer_saved": (engine.coalescer.stats.crossings_saved
+                            if engine.coalescer is not None else 0),
+        "restore_overlap_s": mgr.stats.restore_overlap_s,
+        "conformance_ok": check_tape(tape).ok,
+    }
+
+
+def run() -> list[str]:
+    model = smoke_model()
+    results = {name: run_variant(model, name) for name in VARIANTS}
+    base = results["all_off"]
+    full = results["all_on"]
+
+    # gold: the all_off stream itself, re-priced CC-off (§5.2 method)
+    gold = TraceReplayer(base["tape"]).reprice(
+        ReplaySpec(cc_on=False)).total_replayed_s
+    gap = base["total_s"] - gold
+
+    lines = []
+    for name in VARIANTS:
+        r = results[name]
+        recovered = (base["total_s"] - r["total_s"]) / max(gap, 1e-12)
+        lines.append(
+            f"bridge_opt/{name}_bridge_s,{r['total_s']:.6f},"
+            f"decode={r['decode_s']:.6f}s restore={r['restore_s']:.6f}s "
+            f"recovered={recovered:.3f} of CC gap")
+    for name in LADDER:
+        lines.append(
+            f"bridge_opt/{name}_fresh_share,{results[name]['fresh_share']:.6f},"
+            f"fresh-staging share of recorded tape seconds (SS5.2 class)")
+
+    shares = [results[n]["fresh_share"] for n in LADDER]
+    monotone = all(a > b for a, b in zip(shares, shares[1:]))
+    lines.append(
+        f"bridge_opt/fresh_share_strictly_decreasing,{float(monotone):.4f},"
+        f"ladder {' > '.join(f'{s:.3f}' for s in shares)} "
+        f"(arena+coalescer remove exactly the 44x class)")
+
+    recovered_full = (base["total_s"] - full["total_s"]) / max(gap, 1e-12)
+    lines.append(
+        f"bridge_opt/full_recovered_fraction,{recovered_full:.4f},"
+        f"paper recovery ladder: 0.57 (sched flag) / 0.92 (worker drain); "
+        f"gap={gap:.4f}s gold={gold:.6f}s")
+
+    # CI perf guardrail inputs: coalesced decode must beat the uncoalesced
+    # baselines (both the fresh async path and the arena-staged path)
+    lines.append(
+        f"bridge_opt/decode_bridge_time_uncoalesced_s,"
+        f"{results['arena']['decode_s']:.6f},"
+        f"arena-staged, per-crossing tolls (async fresh path: "
+        f"{base['decode_s']:.6f}s)")
+    lines.append(
+        f"bridge_opt/decode_bridge_time_coalesced_s,"
+        f"{results['arena_coalescer']['decode_s']:.6f},"
+        f"fused flushes; must be <= uncoalesced")
+
+    arena_stats = full["arena"]
+    lines.append(
+        f"bridge_opt/arena_hit_rate,{arena_stats['hit_rate']:.4f},"
+        f"hits={arena_stats['hits']} misses={arena_stats['misses']} "
+        f"pinned={arena_stats['pinned_bytes']}B "
+        f"high_water={arena_stats['high_water_bytes']}B "
+        f"cap={arena_stats['capacity_bytes']}B")
+    lines.append(
+        f"bridge_opt/coalescer_crossings_saved,{full['coalescer_saved']:.4f},"
+        f"tolls avoided by fusing sub-threshold crossings")
+
+    # the +131% KV-restore penalty, attacked: blocking drain vs pipeline fill
+    blocking = base["restore_s"]
+    pipelined = full["restore_s"]
+    lines.append(
+        f"bridge_opt/restore_blocking_s,{blocking:.6f},"
+        f"whole-prefix blocking drain (the +131% penalty shape)")
+    lines.append(
+        f"bridge_opt/restore_pipelined_s,{pipelined:.6f},"
+        f"pipeline fill only; overlap={full['restore_overlap_s']:.6f}s "
+        f"moved off the critical path")
+    lines.append(
+        f"bridge_opt/restore_speedup_x,{blocking / max(pipelined, 1e-12):.4f},"
+        f"chunked double-buffered restore vs blocking drain")
+
+    conf_ok = all(r["conformance_ok"] for r in results.values())
+    lines.append(
+        f"bridge_opt/conformance_pass,{float(conf_ok):.4f},"
+        f"L1-L4 over all {len(results)} rung tapes")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

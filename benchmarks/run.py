@@ -1,8 +1,11 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV and,
-# with --json, a machine-readable summary (for the BENCH_*.json trajectory).
+# with --json, a machine-readable summary (for the BENCH_*.json trajectory):
+# per-row values, per-module status AND wall time, so trajectories can track
+# both results and cost across PRs.
 import argparse
 import json
 import sys
+import time
 import traceback
 
 
@@ -15,7 +18,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_bridge, bench_serving, bench_loader, bench_offload,
-                   bench_fabric, bench_roofline, bench_cluster, bench_replay)
+                   bench_fabric, bench_roofline, bench_cluster, bench_replay,
+                   bench_bridge_opt)
     modules = [
         ("bridge (SS4.1-4.3)", bench_bridge),
         ("serving (SS5.1-5.5)", bench_serving),
@@ -25,6 +29,8 @@ def main() -> None:
         ("roofline (SSRoofline)", bench_roofline),
         ("cluster (SS7 x SS4 L4)", bench_cluster),
         ("replay (SS5.2 bridge-tape counterfactuals)", bench_replay),
+        ("bridge_opt (SS5.2 x SS8 arena+coalescer+pipelined-restore)",
+         bench_bridge_opt),
     ]
     if args.only:
         modules = [(t, m) for t, m in modules if args.only in t]
@@ -33,8 +39,10 @@ def main() -> None:
     failures = 0
     rows = []
     module_status = {}
+    module_wall_s = {}
     for title, mod in modules:
         print(f"# --- {title} ---")
+        t0 = time.perf_counter()
         try:
             for line in mod.run():
                 print(line)
@@ -50,10 +58,17 @@ def main() -> None:
             failures += 1
             module_status[title] = "error"
             traceback.print_exc()
+        wall = time.perf_counter() - t0
+        module_wall_s[title] = wall
+        slug = title.split(" ", 1)[0]
+        rows.append({"name": f"meta/{slug}_wall_s", "value": wall,
+                     "derived": f"module wall time ({module_status[title]})"})
+        print(f"# {title}: {wall:.2f}s")
 
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "modules": module_status,
+                       "module_wall_s": module_wall_s,
                        "failures": failures}, f, indent=1)
         print(f"# wrote {len(rows)} rows to {args.json}")
 

@@ -1,0 +1,25 @@
+"""CC-aware transfer optimization: close the small alloc-and-copy gap.
+
+Three cooperating pieces, each one paper finding turned into runtime
+machinery (see DESIGN.md §6):
+
+  * ``arena``     — StagingArena: persistent, budgeted pinned staging with
+                    LRU eviction; kills the 44x fresh-staging class.
+  * ``coalescer`` — CrossingCoalescer: sub-threshold crossings queue per
+                    direction and flush fused (one toll for many).
+  * ``restore``   — pipelined_h2d: chunked, double-buffered KV restore over
+                    the SecureChannelPool; attacks the +131% restore penalty.
+
+The subsystem depends only on ``core`` and the trace op-class vocabulary —
+serving/loader/cluster layers wire it in, never the other way around.
+"""
+
+from .arena import ArenaSlot, ArenaStats, StagingArena
+from .coalescer import CoalescerStats, CrossingCoalescer
+from .restore import PipelinedRestoreResult, pipelined_h2d
+
+__all__ = [
+    "ArenaSlot", "ArenaStats", "StagingArena",
+    "CoalescerStats", "CrossingCoalescer",
+    "PipelinedRestoreResult", "pipelined_h2d",
+]

@@ -1,0 +1,201 @@
+"""CrossingCoalescer — queue sub-threshold crossings, flush them fused.
+
+§8 rule 1 says small crossings must be batched; the engine's `batch_h2d`
+does that eagerly *within* one call site.  The coalescer generalizes it
+across call sites and steps: sub-threshold crossings queue per direction
+and flush as ONE fused REGISTERED crossing when any trigger fires:
+
+  * watermark  — queued bytes reach `watermark_bytes` (the flush buffer
+                 is full),
+  * deadline   — the oldest queued crossing has waited `deadline_s` on the
+                 virtual clock (latency bound),
+  * queue cap  — the coalescer's index table is full (`max_queued`
+                 entries; the bound that keeps deferral finite when the
+                 virtual clock is quiet between flushes),
+  * barrier    — an explicit flush (engine run end / close / caller sync).
+
+Data still moves immediately (`device_put` / `np.asarray` — callers get
+real values); what is deferred is the *bridge charge*: one toll for N
+crossings instead of N tolls.  This is the modeled form of vLLM-style
+drain buffering: sampled tokens stay usable on-device for the next step
+while their host drain is amortized.
+
+Flush staging follows the same first-touch economics as everything else:
+the flush buffer is a persistent watermark-sized slab — acquired from the
+gateway's StagingArena when one is attached (a stable size class, so both
+directions share one slab), otherwise FRESH on the first flush per
+direction and REGISTERED after.
+
+Conservation invariants (property-tested): flushes conserve total bytes
+and crossing count, and no queued crossing is ever dropped — a barrier or
+close always drains both queues.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.bridge import Direction, StagingKind
+from repro.trace import opclasses as oc
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.gateway import TransferGateway
+
+
+@dataclass
+class _Pending:
+    nbytes: int
+    op_class: str
+    enqueued_t: float
+
+
+@dataclass
+class CoalescerStats:
+    queued: int = 0
+    queued_bytes: int = 0
+    passthrough: int = 0
+    passthrough_bytes: int = 0
+    #: source crossings fused into flushed crossings so far
+    fused_crossings: int = 0
+    fused_bytes: int = 0
+    #: flush count per trigger ("watermark"/"deadline"/"queue_cap"/"barrier")
+    flushes: dict = field(default_factory=dict)
+    max_queue_depth: int = 0
+
+    @property
+    def n_flushes(self) -> int:
+        return sum(self.flushes.values())
+
+    @property
+    def crossings_saved(self) -> int:
+        """Tolls avoided: N queued crossings became n_flushes fused ones."""
+        return self.fused_crossings - self.n_flushes
+
+
+class CrossingCoalescer:
+    OP_CLASS = {Direction.H2D: oc.COALESCED_H2D, Direction.D2H: oc.COALESCED_D2H}
+
+    def __init__(self, gateway: "TransferGateway", *,
+                 threshold_bytes: int = 4096,
+                 watermark_bytes: int = 32 << 10,
+                 deadline_s: float = 500e-6,
+                 max_queued: int = 64):
+        if threshold_bytes <= 0 or watermark_bytes <= 0 or max_queued < 1:
+            raise ValueError("coalescer thresholds must be positive")
+        self.gateway = gateway
+        self.threshold_bytes = int(threshold_bytes)
+        self.watermark_bytes = int(watermark_bytes)
+        self.deadline_s = float(deadline_s)
+        self.max_queued = int(max_queued)
+        self._q: dict[Direction, list[_Pending]] = {
+            Direction.H2D: [], Direction.D2H: []}
+        #: directions whose flush buffer exists (no-arena staging machine)
+        self._flush_buffer_registered: set[Direction] = set()
+        self.stats = CoalescerStats()
+
+    # -- queue views -------------------------------------------------------------------
+
+    def pending(self, direction: Optional[Direction] = None) -> int:
+        if direction is not None:
+            return len(self._q[direction])
+        return sum(len(q) for q in self._q.values())
+
+    def pending_bytes(self, direction: Direction) -> int:
+        return sum(p.nbytes for p in self._q[direction])
+
+    # -- submission --------------------------------------------------------------------
+
+    def h2d(self, host_array: Any, *, op_class: str = "h2d") -> jax.Array:
+        """Host-to-device: real transfer now, bridge charge deferred if small."""
+        arr = np.asarray(host_array)
+        nbytes = int(arr.nbytes)
+        if nbytes > self.threshold_bytes:
+            self.stats.passthrough += 1
+            self.stats.passthrough_bytes += nbytes
+            return self.gateway.h2d(arr, op_class=op_class, reuse_staging=True)
+        dev = jax.device_put(arr, self.gateway.device)
+        self._enqueue(nbytes, Direction.H2D, op_class)
+        return dev
+
+    def d2h(self, device_array: Any, *, op_class: str = "d2h") -> np.ndarray:
+        """Device-to-host: values are available immediately (the engine needs
+        them to continue); the drain's toll joins the fused flush."""
+        # size from the device-side metadata: the actual copy happens once,
+        # on whichever path the threshold picks
+        nbytes = (int(device_array.nbytes) if hasattr(device_array, "nbytes")
+                  else int(np.asarray(device_array).nbytes))
+        if nbytes > self.threshold_bytes:
+            self.stats.passthrough += 1
+            self.stats.passthrough_bytes += nbytes
+            return self.gateway.d2h(device_array, op_class=op_class)
+        host = np.asarray(device_array)
+        self._enqueue(nbytes, Direction.D2H, op_class)
+        return host
+
+    def charge(self, nbytes: int, direction: Direction, *, op_class: str) -> None:
+        """Metadata-only submission (offload spills): no payload moves here."""
+        nbytes = int(nbytes)
+        if nbytes > self.threshold_bytes:
+            self.stats.passthrough += 1
+            self.stats.passthrough_bytes += nbytes
+            self.gateway.charge_crossing(nbytes, direction, op_class=op_class)
+            return
+        self._enqueue(nbytes, direction, op_class)
+
+    def _enqueue(self, nbytes: int, direction: Direction, op_class: str) -> None:
+        q = self._q[direction]
+        now = self.gateway.clock.now
+        if q and now - q[0].enqueued_t >= self.deadline_s:
+            self.flush(direction, trigger="deadline")
+        q.append(_Pending(nbytes, op_class, self.gateway.clock.now))
+        self.stats.queued += 1
+        self.stats.queued_bytes += nbytes
+        self.stats.max_queue_depth = max(self.stats.max_queue_depth, len(q))
+        if self.pending_bytes(direction) >= self.watermark_bytes:
+            self.flush(direction, trigger="watermark")
+        elif len(q) >= self.max_queued:
+            self.flush(direction, trigger="queue_cap")
+
+    # -- flush -------------------------------------------------------------------------
+
+    def _flush_staging(self, direction: Direction) -> tuple[StagingKind, tuple[str, ...]]:
+        arena = self.gateway.arena
+        if arena is not None:
+            kind, tag = arena.acquire(self.watermark_bytes)
+            return kind, (tag,)
+        if direction in self._flush_buffer_registered:
+            return StagingKind.REGISTERED, ()
+        self._flush_buffer_registered.add(direction)
+        return StagingKind.FRESH, ()
+
+    def flush(self, direction: Optional[Direction] = None, *,
+              trigger: str = "barrier") -> float:
+        """Flush queued crossings as one fused crossing per direction;
+        returns the bridge time charged."""
+        dirs = [direction] if direction is not None else list(self._q)
+        charged = 0.0
+        for d in dirs:
+            q = self._q[d]
+            if not q:
+                continue
+            total = sum(p.nbytes for p in q)
+            n = len(q)
+            q.clear()
+            staging, tags = self._flush_staging(d)
+            charged += self.gateway.charge_crossing(
+                total, d, staging=staging, op_class=self.OP_CLASS[d], tags=tags)
+            self.stats.fused_crossings += n
+            self.stats.fused_bytes += total
+            self.stats.flushes[trigger] = self.stats.flushes.get(trigger, 0) + 1
+        return charged
+
+    def barrier(self) -> float:
+        """Explicit barrier: drain both queues (never drops a crossing)."""
+        return self.flush(trigger="barrier")
+
+    def close(self) -> float:
+        return self.barrier()

@@ -27,6 +27,9 @@ from typing import Optional
 
 import numpy as np
 
+import dataclasses
+
+from repro.bridge_opt import StagingArena
 from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
 from repro.core.channels import VirtualClock
 from repro.core.fabric import Tenant
@@ -74,10 +77,24 @@ class ReplicaConfig:
     prefill_ms_per_token: float = 0.5
     #: KV payload bytes per token (prices spill/restore crossings)
     kv_bytes_per_token: int = 8192
+    # ---- bridge_opt (DESIGN.md §6) ---------------------------------------
+    #: pinned staging budget for the replica's arena (0 = legacy staging)
+    staging_arena_bytes: int = 32 << 20
+    #: chunk + double-buffer prefix restores across the leased channels
+    pipelined_restore: bool = True
+    #: restore chunk size (0 = two KV blocks per chunk)
+    restore_chunk_bytes: int = 0
+    #: fuse sub-threshold crossings (off by default: the engine's sync
+    #: batching already covers the per-step prep; opt in per deployment)
+    coalesce_small_crossings: bool = False
 
     @property
     def block_bytes(self) -> int:
         return self.block_tokens * self.kv_bytes_per_token
+
+    @property
+    def effective_restore_chunk_bytes(self) -> int:
+        return self.restore_chunk_bytes or 2 * self.block_bytes
 
 
 @dataclass
@@ -91,6 +108,8 @@ class ReplicaMetrics:
     virtual_time_s: float
     bridge_time_s: float
     op_class_seconds: dict[str, float] = field(default_factory=dict)
+    #: staging-arena hit rate (1.0 when no arena: nothing is missing)
+    arena_hit_rate: float = 1.0
 
 
 class Replica:
@@ -103,14 +122,23 @@ class Replica:
         self.bridge = bridge
         self.cfg = cfg or ReplicaConfig()
         self.clock = VirtualClock()
-        defaults = cc_aware_defaults(bridge.cc_on,
-                                     concurrency=self.cfg.max_batch)
+        defaults = dataclasses.replace(
+            cc_aware_defaults(bridge.cc_on, concurrency=self.cfg.max_batch),
+            staging_arena_bytes=self.cfg.staging_arena_bytes,
+            pipelined_restore=self.cfg.pipelined_restore,
+            coalesce_small_crossings=self.cfg.coalesce_small_crossings)
+        self.arena = (StagingArena(self.cfg.staging_arena_bytes)
+                      if self.cfg.staging_arena_bytes else None)
         self.gateway = TransferGateway(
             bridge, defaults, clock=self.clock,
-            pool_workers=max(1, lease.n_contexts))
+            pool_workers=max(1, lease.n_contexts), arena=self.arena)
         # §6.1 discipline: pay channel-pool creation at provisioning, next to
-        # the tenant's 10-20 s fmpm activation, never on the serving path
+        # the tenant's 10-20 s fmpm activation, never on the serving path —
+        # and pin the staging classes serving will touch (prompt/prep/KV)
         self.prewarm_seconds = self.gateway.pool.prewarm()
+        if self.arena is not None:
+            self.arena.prewarm([64, 128, 256, self.cfg.block_bytes,
+                                self.cfg.effective_restore_chunk_bytes])
         # every replica records its crossing stream: the cluster's evidence
         # for routing/autoscaling decisions is the same tape the replayer
         # and conformance checker consume
@@ -122,13 +150,16 @@ class Replica:
         self.engine = ServingEngine(
             model, max_batch=self.cfg.max_batch, max_len=self.cfg.max_len,
             gateway=self.gateway, policy=defaults.scheduling, bridge=bridge,
-            seed=seed)
+            defaults=defaults, seed=seed)
         self.scheduler = Scheduler(self.engine, SchedulerConfig())
         self.offload = OffloadManager(
             self.gateway, defaults.offload,
             store_threshold=max(1, self.cfg.store_threshold
                                 or defaults.store_threshold),
-            block_bytes=self.cfg.block_bytes)
+            block_bytes=self.cfg.block_bytes,
+            coalescer=self.engine.coalescer,
+            pipelined_restore=defaults.pipelined_restore,
+            restore_chunk_bytes=self.cfg.effective_restore_chunk_bytes)
         self.pages = PagePool(
             n_pages=self.cfg.n_pages, page_size=self.cfg.block_tokens,
             n_kv_heads=1, head_dim=1, n_layers=1)
@@ -261,6 +292,8 @@ class Replica:
             virtual_time_s=self.clock.now,
             bridge_time_s=self.gateway.stats.bridge_time_s,
             op_class_seconds=per_op,
+            arena_hit_rate=(self.arena.stats.hit_rate
+                            if self.arena is not None else 1.0),
         )
 
     def stats(self) -> dict:
@@ -274,5 +307,8 @@ class Replica:
             warm_blocks_restored=self.warm_blocks_restored,
             untracked_requests=self.untracked_requests,
             offload=self.offload.stats,
+            # staging economics: the cluster-level inventory of what the
+            # persistent arena bought this replica (bridge_opt)
+            arena=(self.arena.stats_dict() if self.arena is not None else None),
         )
         return s

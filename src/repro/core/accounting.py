@@ -40,6 +40,8 @@ class CopyRecord:
     t_start: float = 0.0        # virtual-clock interval of the crossing
     t_end: float = 0.0
     charged: bool = True        # False: wall-clock charge accounted elsewhere
+    #: free-form provenance tags (e.g. arena_hit/arena_miss staging outcome)
+    tags: tuple = ()
 
 
 @dataclass

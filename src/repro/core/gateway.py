@@ -58,6 +58,7 @@ class TransferGateway:
         clock: Optional[VirtualClock] = None,
         pool_workers: int = 1,
         device: Optional[jax.Device] = None,
+        arena: Optional[Any] = None,
     ):
         self.bridge = bridge
         self.defaults = defaults
@@ -70,32 +71,50 @@ class TransferGateway:
         #: emit hooks: every finished crossing is pushed to each subscriber
         #: (trace.TraceRecorder attaches here to build a BridgeTape)
         self.on_record: list[Callable[[CopyRecord], None]] = []
-        self._staging_registered: set[tuple[int, ...]] = set()
+        #: optional bridge_opt.StagingArena — when attached, staging is a
+        #: budgeted slab resource instead of the unbounded registered set
+        self.arena = arena
+        self._staging_registered: set[tuple] = set()
 
     # -- staging discipline -----------------------------------------------------------
 
-    def _staging_kind(self, shape: tuple[int, ...], *, reuse_staging: bool) -> StagingKind:
-        """FRESH on first sight of a buffer shape unless the caller drains and
-        reuses staging (the sync/worker pattern); REGISTERED afterwards."""
-        key = tuple(shape)
+    def _staging_kind(self, shape: tuple[int, ...], dtype: Any, nbytes: int, *,
+                      reuse_staging: bool) -> tuple[StagingKind, tuple[str, ...]]:
+        """Resolve a crossing's staging path; returns (kind, record tags).
+
+        With a StagingArena attached, *every* crossing stages through the
+        persistent slab pool — the arena replaces per-call fresh allocation
+        even on the non-reuse (async) path, which is exactly the fix for
+        the 44x class.  Without one, the legacy machine applies: FRESH on
+        first sight of a (shape, dtype) buffer unless the caller drains and
+        reuses staging (the sync/worker pattern); REGISTERED afterwards.
+        Keying on (shape, dtype) — not shape alone — keeps two buffers of
+        equal shape but different element width from sharing a slot.
+        """
+        if self.arena is not None:
+            kind, tag = self.arena.acquire(nbytes)
+            return kind, (tag,)
+        key = (tuple(shape), str(dtype))
         if reuse_staging and key in self._staging_registered:
-            return StagingKind.REGISTERED
+            return StagingKind.REGISTERED, ()
         if reuse_staging:
             self._staging_registered.add(key)
-            return StagingKind.FRESH  # first touch registers the slot
-        return StagingKind.FRESH
+            return StagingKind.FRESH, ()  # first touch registers the slot
+        return StagingKind.FRESH, ()
 
     # -- crossings ---------------------------------------------------------------------
 
     def h2d(self, host_array: np.ndarray, *, op_class: str = "h2d",
             reuse_staging: bool = True) -> jax.Array:
         """One host-to-device crossing: real device_put + bridge-law charge."""
-        staging = self._staging_kind(np.shape(host_array), reuse_staging=reuse_staging)
-        crossing = Crossing(_nbytes(host_array), Direction.H2D, staging)
+        arr = np.asarray(host_array)
+        staging, tags = self._staging_kind(arr.shape, arr.dtype, int(arr.nbytes),
+                                           reuse_staging=reuse_staging)
+        crossing = Crossing(int(arr.nbytes), Direction.H2D, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end)
-        return jax.device_put(np.asarray(host_array), self.device)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags)
+        return jax.device_put(arr, self.device)
 
     def d2h(self, device_array: jax.Array, *, op_class: str = "d2h") -> np.ndarray:
         """One device-to-host crossing (the drain).  Blocking under CC (L2)."""
@@ -115,13 +134,22 @@ class TransferGateway:
         if not host_arrays:
             return []
         if not self.defaults.batch_small_crossings:
-            return [self.h2d(a, op_class=op_class, reuse_staging=False)
+            # unbatched baseline still follows the staging discipline:
+            # repeated (shape, dtype) buffers reuse registered staging
+            # rather than paying FRESH per array per call, so comparing
+            # against the batched path measures *batching*, not staging abuse
+            return [self.h2d(a, op_class=op_class, reuse_staging=True)
                     for a in host_arrays]
         total = sum(_nbytes(a) for a in host_arrays)
-        crossing = Crossing(total, Direction.H2D, StagingKind.REGISTERED)
+        if self.arena is not None:
+            staging, tag = self.arena.acquire(total)
+            tags: tuple[str, ...] = (tag,)
+        else:
+            staging, tags = StagingKind.REGISTERED, ()
+        crossing = Crossing(total, Direction.H2D, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags)
         self.stats.batched_crossings_saved += len(host_arrays) - 1
         return [jax.device_put(np.asarray(a), self.device) for a in host_arrays]
 
@@ -143,25 +171,40 @@ class TransferGateway:
         self.stats.bridge_time_s += self.clock.now - before
         return out
 
+    def pooled_crossing(self, crossing: Crossing, *,
+                        op_class: str) -> tuple[int, float, float]:
+        """Submit one crossing to the channel pool, recorded *uncharged*.
+
+        Returns ``(ctx_id, start, done)``.  The caller owns the
+        critical-path charge — the pipelined KV restore uses this to block
+        only for its pipeline fill while later chunks overlap engine work.
+        """
+        ctx_id, start, done = self.pool.submit_ex(crossing)
+        self._record(crossing, done - start, op_class, charge=False,
+                     channel=ctx_id, t_end=done)
+        return ctx_id, start, done
+
     def charge_crossing(self, nbytes: int, direction: Direction, *,
                         staging: StagingKind = StagingKind.REGISTERED,
-                        op_class: str) -> float:
+                        op_class: str, tags: tuple = ()) -> float:
         """Price + record a metadata-only crossing (no tensor moves).
 
         Call sites that account a crossing without materializing its payload
         (the offload manager's metadata-only spill, the loader's modeled
-        shard transfers) use this instead of hand-rolling stats so the
-        crossing still lands in the tape with a consistent interval.
+        shard transfers, the coalescer's fused flushes) use this instead of
+        hand-rolling stats so the crossing still lands in the tape with a
+        consistent interval.
         """
         crossing = Crossing(int(nbytes), direction, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags)
         return cost
 
     def record_modeled(self, nbytes: int, direction: Direction, cost: float, *,
                        op_class: str,
-                       staging: StagingKind = StagingKind.REGISTERED) -> None:
+                       staging: StagingKind = StagingKind.REGISTERED,
+                       tags: tuple = ()) -> None:
         """Record a crossing whose cost an external model already computed.
 
         The pooled loader prices its ladder variants with its own calibrated
@@ -172,13 +215,13 @@ class TransferGateway:
         """
         crossing = Crossing(int(nbytes), direction, staging)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags)
 
     # -- bookkeeping -------------------------------------------------------------------
 
     def _record(self, crossing: Crossing, cost: float, op_class: str, *,
                 charge: bool = True, channel: int = -1,
-                t_end: Optional[float] = None) -> None:
+                t_end: Optional[float] = None, tags: tuple = ()) -> None:
         """`charge=False` keeps the per-crossing duration in the records (for
         op-class attribution) without adding it to bridge_time_s — used when
         the wall-clock charge is accounted elsewhere (pooled drain).
@@ -199,7 +242,8 @@ class TransferGateway:
         rec = CopyRecord(
             op_class, crossing.nbytes, cost, self.bridge.cc_on,
             direction=crossing.direction.value, staging=crossing.staging.value,
-            channel=channel, t_start=end - cost, t_end=end, charged=charge)
+            channel=channel, t_start=end - cost, t_end=end, charged=charge,
+            tags=tuple(tags))
         self.records.append(rec)
         for hook in self.on_record:
             hook(rec)

@@ -56,10 +56,20 @@ class RuntimeDefaults:
     loader_prewarm: bool
     #: batch small per-step crossings into one staged crossing (§8 rule 1)
     batch_small_crossings: bool
+    # ---- bridge_opt levers (DESIGN.md §6) -------------------------------------
+    #: pinned-byte budget for the persistent StagingArena (0 = legacy
+    #: unbudgeted registered-set staging, no arena)
+    staging_arena_bytes: int = 0
+    #: queue sub-threshold crossings and flush them fused (CrossingCoalescer)
+    coalesce_small_crossings: bool = False
+    #: chunk + double-buffer KV restores across the channel pool so restore
+    #: overlaps subsequent decode steps (attacks the +131% restore penalty)
+    pipelined_restore: bool = False
 
 
 def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,
-                      concurrency: Optional[int] = None) -> RuntimeDefaults:
+                      concurrency: Optional[int] = None,
+                      bridge_opt: bool = False) -> RuntimeDefaults:
     """The paper's §8 checklist as a runtime default table.
 
     CC-off: the classic overlap-everything defaults are correct.
@@ -72,6 +82,11 @@ def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,
     below 256 concurrent sequences, WORKER_DRAIN above.  `allow_worker_drain`
     gates the qualified v10c patch entirely; the conservative default is the
     fully-reproduced one-flag fix (SYNC_DRAIN).
+
+    `bridge_opt=True` additionally enables the transfer-optimization
+    subsystem (persistent staging arena, crossing coalescer, pipelined KV
+    restore — DESIGN.md §6) when CC is on.  It is off by default so the
+    paper's measured baselines stay reproducible as recorded.
     """
     if not cc_on:
         return RuntimeDefaults(
@@ -91,6 +106,9 @@ def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,
         loader_pool_workers=8,
         loader_prewarm=True,
         batch_small_crossings=True,
+        staging_arena_bytes=(64 << 20) if bridge_opt else 0,
+        coalesce_small_crossings=bridge_opt,
+        pipelined_restore=bridge_opt,
     )
 
 

@@ -71,7 +71,8 @@ class PooledLoader:
     def __init__(self, bridge: BridgeModel, *, n_workers: int = 8,
                  rates: Optional[LoaderRates] = None,
                  clock: Optional[VirtualClock] = None,
-                 gateway: Optional[TransferGateway] = None):
+                 gateway: Optional[TransferGateway] = None,
+                 arena=None):
         self.bridge = bridge
         self.n_workers = n_workers
         self.rates = rates or LoaderRates()
@@ -79,6 +80,10 @@ class PooledLoader:
         #: through the gateway (so loads appear on the bridge tape) and the
         #: loader shares its virtual clock
         self.gateway = gateway
+        #: optional bridge_opt.StagingArena: shard staging becomes slab-backed
+        #: — equal-sized shards share one registered slot, so only the first
+        #: pays the fresh toll (the per-shard 44x component collapses)
+        self.arena = arena
         if gateway is not None and clock is not None and clock is not gateway.clock:
             raise ValueError(
                 "loader clock must be the gateway's clock when both are "
@@ -98,8 +103,13 @@ class PooledLoader:
     # -- cost model (virtual clock) -------------------------------------------------------
 
     def modeled_load_time(self, total_bytes: int, n_shards: int,
-                          variant: LoaderVariant) -> dict:
-        """Per-component load-time breakdown in seconds."""
+                          variant: LoaderVariant, *,
+                          staging: Optional[list[StagingKind]] = None) -> dict:
+        """Per-component load-time breakdown in seconds.
+
+        `staging` (one kind per shard, from the arena) replaces the default
+        every-shard-FRESH toll: arena-hit shards pay the warm toll only.
+        """
         r = self.rates
         p = self.bridge.profile
         single_bw = self.bridge.aggregate_bandwidth(Direction.H2D, 1)
@@ -107,9 +117,15 @@ class PooledLoader:
         lifecycle = self.bridge.pool_lifecycle_cost(self.n_workers)
         # each shard's first transfer stages through a freshly pinned bounce
         # buffer: full fresh toll + allocation/registration (the 44x class)
+        # — unless a staging arena turned the slot persistent
+        fresh = p.cc_fresh_toll + p.cc_fresh_alloc
+        if staging is None:
+            toll = n_shards * fresh
+        else:
+            toll = sum(fresh if k is StagingKind.FRESH else p.cc_registered_toll
+                       for k in staging)
         comp = {"stage": 0.0, "transfer": 0.0, "lifecycle": 0.0,
-                "assemble": 0.0,
-                "toll": n_shards * (p.cc_fresh_toll + p.cc_fresh_alloc)}
+                "assemble": 0.0, "toll": toll}
 
         if variant is LoaderVariant.BASELINE:
             comp["stage"] = total_bytes / r.host_stage_rate
@@ -160,7 +176,14 @@ class PooledLoader:
         """
         device = device or jax.devices()[0]
         total = ckpt.total_bytes()
-        breakdown = self.modeled_load_time(total, ckpt.n_shards, variant)
+        kinds = tags = None
+        if self.arena is not None:
+            acq = [self.arena.acquire(ckpt.shard_bytes(s))
+                   for s in range(ckpt.n_shards)]
+            kinds = [k for k, _ in acq]
+            tags = [(t,) for _, t in acq]
+        breakdown = self.modeled_load_time(total, ckpt.n_shards, variant,
+                                           staging=kinds)
         # transfer + toll components are charged per shard through the
         # gateway when one is attached (same total, tape-visible crossings);
         # host-side components (stage/lifecycle/assemble) stay a lump charge
@@ -185,16 +208,25 @@ class PooledLoader:
                 shard_bytes += int(np.asarray(arr).nbytes)
                 tensors[name] = jax.device_put(arr, device)
             if self.gateway is not None:
-                # FRESH matches the toll component the cost embeds (fresh
-                # setup + alloc per shard), so replaying a loader tape under
-                # the identity counterfactual re-prices the same toll class
+                # staging matches the toll component the cost embeds (fresh
+                # setup + alloc per shard without an arena; warm toll on
+                # arena hits), so replaying a loader tape under the identity
+                # counterfactual re-prices the same toll class
                 frac = shard_bytes / total if total else 1.0 / ckpt.n_shards
+                p = self.bridge.profile
+                if kinds is None:
+                    toll_i = breakdown["toll"] / ckpt.n_shards
+                    staging_i, tags_i = StagingKind.FRESH, ()
+                else:
+                    staging_i, tags_i = kinds[shard], tags[shard]
+                    toll_i = (p.cc_fresh_toll + p.cc_fresh_alloc
+                              if staging_i is StagingKind.FRESH
+                              else p.cc_registered_toll)
                 self.gateway.record_modeled(
                     shard_bytes, Direction.H2D,
-                    breakdown["transfer"] * frac
-                    + breakdown["toll"] / ckpt.n_shards,
+                    breakdown["transfer"] * frac + toll_i,
                     op_class=oc.LOADER_SHARD_H2D,
-                    staging=StagingKind.FRESH)
+                    staging=staging_i, tags=tags_i)
         if pool is not None:
             pool.teardown(async_=(variant is LoaderVariant.PREWARMED))
         return tensors, breakdown

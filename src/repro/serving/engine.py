@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bridge_opt import CrossingCoalescer, StagingArena
 from repro.core.bridge import BridgeModel
 from repro.core.channels import VirtualClock
 from repro.core.gateway import TransferGateway
@@ -77,6 +78,7 @@ class ServingEngine:
                  policy: Optional[SchedulingPolicy] = None,
                  cc_on: bool = False,
                  bridge: Optional[BridgeModel] = None,
+                 defaults: Optional[RuntimeDefaults] = None,
                  seed: int = 0):
         from repro.core.bridge import TPU_V5E
         self.model = model
@@ -84,11 +86,21 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.bridge = bridge or BridgeModel(TPU_V5E, cc_on=cc_on)
-        self.defaults = cc_aware_defaults(self.bridge.cc_on)
+        self.defaults = defaults or cc_aware_defaults(self.bridge.cc_on)
         self.policy = policy or self.defaults.scheduling
-        self.gateway = gateway or TransferGateway(
-            self.bridge, self.defaults,
-            pool_workers=self.defaults.loader_pool_workers or 1)
+        if gateway is None:
+            # bridge_opt: staging becomes a budgeted arena when defaults ask
+            arena = (StagingArena(self.defaults.staging_arena_bytes)
+                     if self.defaults.staging_arena_bytes else None)
+            gateway = TransferGateway(
+                self.bridge, self.defaults,
+                pool_workers=self.defaults.loader_pool_workers or 1,
+                arena=arena)
+        self.gateway = gateway
+        #: bridge_opt: sub-threshold crossings queue here and flush fused —
+        #: replaces both the fresh-per-step async path and eager batching
+        self.coalescer = (CrossingCoalescer(self.gateway)
+                          if self.defaults.coalesce_small_crossings else None)
         self.clock: VirtualClock = self.gateway.clock
 
         self.params = model.init(jax.random.PRNGKey(seed))
@@ -106,7 +118,9 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, c, t, i: self.model.decode_step(p, c, t, i))
 
-        if self.policy is SchedulingPolicy.WORKER_DRAIN:
+        # with a coalescer every drain routes through it, so the worker
+        # thread would only idle (worker x coalescer composition: ROADMAP)
+        if self.policy is SchedulingPolicy.WORKER_DRAIN and self.coalescer is None:
             self._start_worker()
 
     # -- worker thread (v10c) --------------------------------------------------------
@@ -124,6 +138,8 @@ class ServingEngine:
         self._worker.start()
 
     def close(self):
+        if self.coalescer is not None:
+            self.coalescer.barrier()
         if self._worker is not None:
             self._drain_q.put(None)
             self._worker.join(timeout=5)
@@ -145,15 +161,22 @@ class ServingEngine:
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
         prompt = np.asarray(req.prompt, np.int32)[None]     # (1, P)
         # prompt upload crosses the bridge (registered: steady-state serving
-        # reuses the prompt staging buffer)
-        self.gateway.h2d(prompt, op_class=oc.PROMPT_H2D)
+        # reuses the prompt staging buffer; coalesced when bridge_opt is on)
+        if self.coalescer is not None:
+            self.coalescer.h2d(prompt, op_class=oc.PROMPT_H2D)
+        else:
+            self.gateway.h2d(prompt, op_class=oc.PROMPT_H2D)
         batch = {"tokens": jnp.asarray(prompt)}
         logits, pre_cache, idx0 = self.model.prefill(
             self.params, batch, max_len=self.max_len)
         self._insert_slot_cache(pre_cache, slot)
         self.key, sk = jax.random.split(self.key)
         first = sample(logits, sk, req.sampling)
-        tok = int(self.gateway.d2h(first, op_class=oc.SAMPLE_D2H)[0])
+        if self.coalescer is not None:
+            first_host = self.coalescer.d2h(first, op_class=oc.SAMPLE_D2H)
+        else:
+            first_host = self.gateway.d2h(first, op_class=oc.SAMPLE_D2H)
+        tok = int(first_host[0])
         req.output_tokens.append(tok)
         req.first_token_t = self.clock.now
         req.state = "running"
@@ -217,7 +240,14 @@ class ServingEngine:
         # --- input prep crossings (scatter/sampling-index analogue) ---
         small_inputs = [tokens, index] + [
             np.zeros((len(slots),), np.int32) for _ in range(4)]
-        if self.policy is SchedulingPolicy.ASYNC_OVERLAP:
+        if self.coalescer is not None:
+            # bridge_opt: uploads queue and flush fused across steps
+            prep_class = (oc.ALLOC_H2D
+                          if self.policy is SchedulingPolicy.ASYNC_OVERLAP
+                          else oc.PREP_BATCHED_H2D)
+            for arr in small_inputs:
+                self.coalescer.h2d(arr, op_class=prep_class)
+        elif self.policy is SchedulingPolicy.ASYNC_OVERLAP:
             # vLLM async path: fresh pinned staging per step (the 44x class)
             for arr in small_inputs:
                 self.gateway.h2d(arr, op_class=oc.ALLOC_H2D, reuse_staging=False)
@@ -230,7 +260,11 @@ class ServingEngine:
         next_tokens = sample(logits, sk, self.active[slots[0]].sampling)
 
         # --- output drain (the policy-defining crossing) ---
-        if self.policy is SchedulingPolicy.WORKER_DRAIN:
+        if self.coalescer is not None:
+            # bridge_opt: token values land now (they stay usable on-device
+            # for the next step); the drain's toll joins the fused flush
+            host_tokens = self.coalescer.d2h(next_tokens, op_class=oc.DRAIN_D2H)
+        elif self.policy is SchedulingPolicy.WORKER_DRAIN:
             done = threading.Event()
             result = {}
             self._drain_q.put((next_tokens, lambda h: (result.update(h=h),
@@ -267,6 +301,8 @@ class ServingEngine:
             if self.step() == 0 and not self.queue:
                 break
             steps += 1
+        if self.coalescer is not None:
+            self.coalescer.barrier()    # nothing queued survives a run
         return self.stats()
 
     def stats(self) -> dict:

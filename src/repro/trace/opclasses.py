@@ -32,8 +32,21 @@ KV_RESTORE_H2D = "kv_restore_h2d"
 # -- loader (§6.1) --------------------------------------------------------------------
 LOADER_SHARD_H2D = "loader_shard_h2d"
 
+# -- bridge_opt (arena + coalescer + pipelined restore; DESIGN.md §6) -----------------
+#: fused flush of queued sub-threshold H2D crossings (one toll for many)
+COALESCED_H2D = "coalesced_h2d"
+#: fused flush of queued sub-threshold D2H crossings (amortized drain buffer)
+COALESCED_D2H = "coalesced_d2h"
+#: chunked, double-buffered KV restore over the channel pool (§6.2 recovery)
+KV_RESTORE_PIPELINED = "kv_restore_pipelined"
+
+#: record *tags* (additive tape metadata, not op classes): how the staging
+#: arena resolved a crossing's staging buffer
+ARENA_HIT = "arena_hit"
+ARENA_MISS = "arena_miss"
+
 #: classes whose crossings are per-step input preparation (candidates for
 #: batching into one registered crossing in a counterfactual replay).  The
 #: worker-offloadable drain set lives in replay.WORKER_OFFLOADABLE — it is a
 #: replay-policy decision (sample_d2h stays synchronous under every policy).
-PREP_CLASSES = frozenset({ALLOC_H2D, PREP_BATCHED_H2D})
+PREP_CLASSES = frozenset({ALLOC_H2D, PREP_BATCHED_H2D, COALESCED_H2D})

@@ -32,8 +32,9 @@ from .tape import BridgeTape, TapeRecord
 US = 1e-6
 
 #: drain classes a worker thread can take off the engine's critical path
+#: (a fused coalesced drain is still a drain — it offloads the same way)
 WORKER_OFFLOADABLE = frozenset({oc.DRAIN_D2H, oc.DRAIN_D2H_NONBLOCKING,
-                                oc.WORKER_DRAIN})
+                                oc.WORKER_DRAIN, oc.COALESCED_D2H})
 
 
 @dataclass(frozen=True)

@@ -44,6 +44,9 @@ class TapeRecord:
     t_start: float
     t_end: float
     charged: bool = True
+    #: additive provenance tags (bridge_opt: arena_hit/arena_miss); default
+    #: empty, so pre-tag tapes parse unchanged (no version bump)
+    tags: tuple = ()
 
     @property
     def duration_s(self) -> float:
@@ -53,7 +56,8 @@ class TapeRecord:
     def from_copy_record(cls, rec: CopyRecord) -> "TapeRecord":
         return cls(op_class=rec.op_class, direction=rec.direction,
                    nbytes=rec.nbytes, staging=rec.staging, channel=rec.channel,
-                   t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged)
+                   t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged,
+                   tags=tuple(rec.tags))
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -63,7 +67,8 @@ class TapeRecord:
         return cls(op_class=d["op_class"], direction=d["direction"],
                    nbytes=int(d["nbytes"]), staging=d["staging"],
                    channel=int(d["channel"]), t_start=float(d["t_start"]),
-                   t_end=float(d["t_end"]), charged=bool(d.get("charged", True)))
+                   t_end=float(d["t_end"]), charged=bool(d.get("charged", True)),
+                   tags=tuple(d.get("tags", ())))
 
 
 @dataclass(frozen=True)
@@ -120,6 +125,28 @@ class BridgeTape:
         out: dict[str, float] = {}
         for r in self.records:
             out[r.op_class] = out.get(r.op_class, 0.0) + r.duration_s
+        return out
+
+    def staging_seconds(self) -> dict[str, float]:
+        """Recorded seconds per staging kind ("fresh"/"registered")."""
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.staging] = out.get(r.staging, 0.0) + r.duration_s
+        return out
+
+    def fresh_share(self) -> float:
+        """Fraction of recorded seconds spent in fresh-staged crossings —
+        the §5.2 headline class's share of this tape (bridge_opt's target)."""
+        total = self.total_recorded_s()
+        if total <= 0:
+            return 0.0
+        return self.staging_seconds().get("fresh", 0.0) / total
+
+    def tag_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for r in self.records:
+            for t in r.tags:
+                out[t] = out.get(t, 0) + 1
         return out
 
     def wall_span_s(self) -> float:

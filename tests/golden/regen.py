@@ -1,14 +1,24 @@
-"""Regenerate the checked-in golden bridge tapes.
+"""Regenerate (or verify) the checked-in golden bridge tapes.
 
 Usage (from the repo root):
 
-    PYTHONPATH=src python tests/golden/regen.py
+    PYTHONPATH=src python tests/golden/regen.py            # rewrite tapes
+    PYTHONPATH=src python tests/golden/regen.py --check    # CI staleness gate
 
-Only run this when a scheduling policy *intentionally* changes its crossing
+Only rewrite when a scheduling policy *intentionally* changes its crossing
 behavior; review the diff of the tapes like code (crossing counts, op-class
 mix and totals are the regression surface).  See DESIGN.md §5.
+
+``--check`` re-records the golden workload and compares it against the
+checked-in tapes without writing anything: crossing count, op-class mix,
+byte totals, per-record (op class, direction, bytes, staging, channel,
+tags) sequence, and virtual-clock totals to 1e-9 relative.  A non-zero
+exit means the tapes are stale — e.g. a new op class or record field
+landed without a regen — so CI fails before a golden test silently loses
+its regression surface.
 """
 
+import argparse
 import os
 import sys
 
@@ -16,18 +26,75 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
 
 from repro.trace.conformance import assert_conformant
 from repro.trace.harness import GOLDEN_TAPE_FILES, record_golden_tape, smoke_model
+from repro.trace.tape import BridgeTape
+
+REL_TOL = 1e-9
+
+
+def _record_signature(r) -> tuple:
+    return (r.op_class, r.direction, r.nbytes, r.staging, r.channel,
+            tuple(r.tags), r.charged)
+
+
+def _compare(fresh: BridgeTape, golden: BridgeTape, filename: str) -> list[str]:
+    problems = []
+    if fresh.n_crossings() != golden.n_crossings():
+        problems.append(f"{filename}: crossing count {golden.n_crossings()} "
+                        f"-> {fresh.n_crossings()}")
+    if fresh.op_class_mix() != golden.op_class_mix():
+        problems.append(f"{filename}: op-class mix {golden.op_class_mix()} "
+                        f"-> {fresh.op_class_mix()}")
+    if fresh.total_bytes() != golden.total_bytes():
+        problems.append(f"{filename}: total bytes {golden.total_bytes()} "
+                        f"-> {fresh.total_bytes()}")
+    for label, a, b in (("total_recorded_s", golden.total_recorded_s(),
+                         fresh.total_recorded_s()),
+                        ("wall_span_s", golden.wall_span_s(),
+                         fresh.wall_span_s())):
+        if abs(a - b) > REL_TOL * max(abs(a), abs(b), 1e-30):
+            problems.append(f"{filename}: {label} {a!r} -> {b!r}")
+    if len(fresh.records) == len(golden.records):
+        for i, (fr, gr) in enumerate(zip(fresh.records, golden.records)):
+            if _record_signature(fr) != _record_signature(gr):
+                problems.append(
+                    f"{filename}: record {i} {_record_signature(gr)} "
+                    f"-> {_record_signature(fr)}")
+                break
+    return problems
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="verify the checked-in tapes instead of rewriting")
+    args = ap.parse_args()
+
     out_dir = os.path.dirname(os.path.abspath(__file__))
     model = smoke_model()
+    problems = []
     for policy, filename in GOLDEN_TAPE_FILES.items():
         tape = record_golden_tape(policy, model=model)
         assert_conformant(tape)
         path = os.path.join(out_dir, filename)
-        tape.save(path)
-        print(f"{filename}: {tape.n_crossings()} crossings, "
-              f"{tape.total_recorded_s():.6f}s, mix={tape.op_class_mix()}")
+        if args.check:
+            if not os.path.exists(path):
+                file_problems = [f"{filename}: missing"]
+            else:
+                file_problems = _compare(tape, BridgeTape.load(path), filename)
+            print(f"{filename}: {'OK' if not file_problems else 'STALE'} "
+                  f"({tape.n_crossings()} crossings)")
+            problems.extend(file_problems)
+        else:
+            tape.save(path)
+            print(f"{filename}: {tape.n_crossings()} crossings, "
+                  f"{tape.total_recorded_s():.6f}s, mix={tape.op_class_mix()}")
+    if args.check and problems:
+        print("golden tapes are stale — regenerate with "
+              "`PYTHONPATH=src python tests/golden/regen.py` and review "
+              "the diff (DESIGN.md §5):")
+        for p in problems:
+            print(f"  {p}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,387 @@
+"""bridge_opt subsystem: staging arena, crossing coalescer, pipelined
+restore, and the two gateway staging-discipline fixes that ride along
+((shape, dtype) slot keying; unbatched fallback keeps the discipline)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.bridge_opt import (CrossingCoalescer, StagingArena, pipelined_h2d)
+from repro.core.bridge import (B300, TPU_V5E, BridgeModel, Crossing, Direction,
+                               StagingKind)
+from repro.core.gateway import TransferGateway
+from repro.core.policy import (OffloadPolicy, SchedulingPolicy as SP,
+                               cc_aware_defaults)
+from repro.serving.offload import HostBlock, OffloadManager
+from repro.trace import TraceRecorder, check_tape
+from repro.trace import opclasses as oc
+
+
+def _gw(cc_on=True, workers=1, arena=None, batching=None):
+    defaults = cc_aware_defaults(cc_on)
+    if batching is not None:
+        defaults = dataclasses.replace(defaults,
+                                       batch_small_crossings=batching)
+    return TransferGateway(BridgeModel(TPU_V5E, cc_on=cc_on), defaults,
+                           pool_workers=workers, arena=arena)
+
+
+class TestStagingArena:
+    def test_first_touch_miss_then_hits(self):
+        arena = StagingArena(1 << 20)
+        kind, tag = arena.acquire(100)
+        assert kind is StagingKind.FRESH and tag == oc.ARENA_MISS
+        for _ in range(3):
+            kind, tag = arena.acquire(100)
+            assert kind is StagingKind.REGISTERED and tag == oc.ARENA_HIT
+        assert arena.stats.hits == 3 and arena.stats.misses == 1
+
+    def test_same_size_class_shares_a_slot(self):
+        """The slab property: 100B and 120B land in the same class."""
+        arena = StagingArena(1 << 20)
+        arena.acquire(100)
+        kind, _ = arena.acquire(120)
+        assert kind is StagingKind.REGISTERED
+        assert len(arena.registered_classes()) == 1
+
+    def test_pinned_cap_is_enforced_by_lru_eviction(self):
+        arena = StagingArena(256, min_class_bytes=64)
+        arena.acquire(64)       # pins 64
+        arena.acquire(128)      # pins 128 -> 192 total
+        arena.acquire(60)       # hit on 64: refreshes its LRU position
+        arena.acquire(256)      # needs 256: evicts LRU (128), then 64
+        assert arena.stats.pinned_bytes <= 256
+        # 64 was touched more recently than 128, so 128 went first; the
+        # 256 reservation then still needed room, so 64 went too
+        assert arena.registered_classes() == [256]
+        assert arena.stats.evictions == 2
+
+    def test_oversize_never_pins(self):
+        arena = StagingArena(1024)
+        for _ in range(3):
+            kind, tag = arena.acquire(4096)
+            assert kind is StagingKind.FRESH and tag == oc.ARENA_MISS
+        assert arena.stats.oversize == 3
+        assert arena.stats.pinned_bytes == 0
+
+    def test_prewarm_makes_first_touch_warm(self):
+        arena = StagingArena(1 << 20)
+        assert arena.prewarm([100, 5000]) == 2
+        assert arena.acquire(100)[0] is StagingKind.REGISTERED
+        assert arena.acquire(5000)[0] is StagingKind.REGISTERED
+        assert arena.stats.misses == 0
+        assert arena.stats.prewarmed_slots == 2
+
+    def test_high_water_tracks_peak_not_current(self):
+        arena = StagingArena(256, min_class_bytes=64)
+        arena.acquire(64)
+        arena.acquire(128)
+        peak = arena.stats.pinned_bytes
+        arena.acquire(256)      # evicts both
+        assert arena.stats.high_water_bytes >= peak
+        assert arena.stats.pinned_bytes == 256
+
+    def test_gateway_arena_serves_non_reuse_paths(self):
+        """The 44x fix: with an arena the async (reuse_staging=False) path
+        stages through the persistent slab instead of allocating fresh."""
+        gw = _gw(arena=StagingArena(1 << 20))
+        x = np.zeros(64, np.float32)
+        gw.h2d(x, reuse_staging=False)
+        gw.h2d(x, reuse_staging=False)
+        assert gw.records[0].staging == "fresh"
+        assert gw.records[1].staging == "registered"
+        assert gw.records[0].tags == (oc.ARENA_MISS,)
+        assert gw.records[1].tags == (oc.ARENA_HIT,)
+
+
+class TestStagingKeyIncludesDtype:
+    """Regression (issue satellite): two buffers with the same shape but
+    different dtype/nbytes must not share one staging slot."""
+
+    def test_same_shape_different_dtype_is_a_distinct_slot(self):
+        gw = _gw()
+        gw.h2d(np.zeros(64, np.float32), reuse_staging=True)   # first: FRESH
+        rec_i8 = None
+        gw.h2d(np.zeros(64, np.int8), reuse_staging=True)
+        rec_i8 = gw.records[-1]
+        # previously keyed on shape alone: the int8 buffer would have
+        # (wrongly) hit the float32 slot and staged REGISTERED
+        assert rec_i8.staging == "fresh"
+        gw.h2d(np.zeros(64, np.int8), reuse_staging=True)
+        assert gw.records[-1].staging == "registered"
+        gw.h2d(np.zeros(64, np.float32), reuse_staging=True)
+        assert gw.records[-1].staging == "registered"
+
+
+class TestBatchFallbackStagingDiscipline:
+    """Regression (issue satellite): the batching-disabled fallback must
+    follow the staging discipline for repeated shapes — otherwise the
+    batching win in bench_bridge is overstated by the fresh-staging tax."""
+
+    def test_unbatched_fallback_registers_repeated_shapes(self):
+        gw = _gw(batching=False)
+        arrays = [np.zeros(16, np.int32) for _ in range(8)]
+        gw.batch_h2d(arrays)
+        stagings = [r.staging for r in gw.records]
+        assert stagings[0] == "fresh"
+        assert all(s == "registered" for s in stagings[1:])
+        gw.batch_h2d(arrays)     # second call: fully warm
+        assert all(r.staging == "registered" for r in gw.records[8:])
+
+    def test_batching_win_measures_batching_not_staging(self):
+        arrays = [np.zeros(16, np.int32) for _ in range(8)]
+        batched, unbatched = _gw(batching=True), _gw(batching=False)
+        batched.batch_h2d(arrays)
+        unbatched.batch_h2d(arrays)
+        # one registered toll vs 1 fresh + 7 registered tolls: much closer
+        # than the old 8x-fresh fallback, but batching still clearly wins
+        assert unbatched.clock.now > 5 * batched.clock.now
+        p = batched.bridge.profile
+        old_fallback = 8 * (p.cc_fresh_toll + p.cc_fresh_alloc)
+        assert unbatched.clock.now < old_fallback / 2
+
+
+class TestCrossingCoalescer:
+    def test_watermark_trigger_conserves_bytes_and_count(self):
+        gw = _gw()
+        co = CrossingCoalescer(gw, threshold_bytes=4096, watermark_bytes=2048)
+        for _ in range(4):
+            co.h2d(np.zeros(128, np.int32), op_class="prep")   # 512B each
+        assert co.stats.flushes.get("watermark") == 1
+        assert co.pending() == 0
+        rec = gw.records[-1]
+        assert rec.op_class == oc.COALESCED_H2D and rec.nbytes == 2048
+        assert co.stats.fused_crossings == 4
+
+    def test_deadline_trigger_fires_on_the_virtual_clock(self):
+        gw = _gw()
+        co = CrossingCoalescer(gw, deadline_s=1e-4)
+        co.h2d(np.zeros(4, np.int32), op_class="prep")
+        gw.charge_crossing(1 << 20, Direction.H2D, op_class="big")  # clock moves
+        co.h2d(np.zeros(4, np.int32), op_class="prep")
+        assert co.stats.flushes.get("deadline") == 1
+
+    def test_queue_cap_bounds_deferral(self):
+        gw = _gw()
+        co = CrossingCoalescer(gw, max_queued=8, deadline_s=1e9,
+                               watermark_bytes=1 << 30)
+        for _ in range(20):
+            co.d2h(np.zeros(1, np.int32), op_class="drain")
+        assert co.stats.flushes.get("queue_cap") == 2
+        assert co.pending(Direction.D2H) == 4
+
+    def test_barrier_never_drops_a_crossing(self):
+        gw = _gw()
+        co = CrossingCoalescer(gw)
+        co.h2d(np.zeros(3, np.int8), op_class="a")
+        co.d2h(np.zeros(5, np.int8), op_class="b")
+        co.charge(7, Direction.D2H, op_class="c")
+        co.barrier()
+        assert co.pending() == 0
+        assert co.stats.fused_crossings == co.stats.queued == 3
+        assert co.stats.fused_bytes == co.stats.queued_bytes == 15
+        # idempotent: an empty barrier charges nothing
+        before = gw.clock.now
+        co.barrier()
+        assert gw.clock.now == before
+
+    def test_large_crossings_pass_through(self):
+        gw = _gw()
+        co = CrossingCoalescer(gw, threshold_bytes=256)
+        co.h2d(np.zeros(1024, np.float32), op_class=oc.PROMPT_H2D)
+        assert co.stats.passthrough == 1 and co.pending() == 0
+        assert gw.records[-1].op_class == oc.PROMPT_H2D
+
+    def test_values_are_real_despite_deferred_charge(self):
+        gw = _gw()
+        co = CrossingCoalescer(gw)
+        x = np.arange(6, dtype=np.int32)
+        dev = co.h2d(x, op_class="up")
+        np.testing.assert_array_equal(np.asarray(dev), x)
+        back = co.d2h(dev, op_class="down")
+        np.testing.assert_array_equal(back, x)
+
+    def test_flush_staging_first_touch_then_registered(self):
+        gw = _gw()          # no arena: coalescer's own flush buffers
+        co = CrossingCoalescer(gw)
+        for _ in range(2):
+            co.h2d(np.zeros(2, np.int8), op_class="p")
+            co.barrier()
+        h2d_recs = [r for r in gw.records if r.op_class == oc.COALESCED_H2D]
+        assert [r.staging for r in h2d_recs] == ["fresh", "registered"]
+
+    def test_coalesced_tape_is_conformant(self):
+        gw = _gw(arena=StagingArena(1 << 20))
+        co = CrossingCoalescer(gw)
+        with TraceRecorder(gw, label="coalesce") as rec:
+            for i in range(40):
+                co.h2d(np.zeros(8, np.int32), op_class="p")
+                co.d2h(np.zeros(4, np.int32), op_class="d")
+            co.barrier()
+        report = check_tape(rec.tape())
+        assert report.ok, report.format()
+
+
+class TestPipelinedRestore:
+    def _manager(self, pipelined, workers=4):
+        gw = _gw(workers=workers)
+        gw.pool.prewarm()
+        mgr = OffloadManager(gw, OffloadPolicy.REUSE_AWARE,
+                             pipelined_restore=pipelined,
+                             restore_chunk_bytes=64 << 10)
+        for b in range(16):
+            mgr.host_store[b] = HostBlock(b, 64 << 10, 2, None)
+        return gw, mgr
+
+    def test_pipelined_charges_only_the_fill(self):
+        gw_b, blocking = self._manager(False)
+        gw_p, piped = self._manager(True)
+        hits_b = blocking.restore(list(range(16)))
+        hits_p = piped.restore(list(range(16)))
+        assert hits_b == hits_p == (16, 16 * (64 << 10))
+        assert gw_p.stats.bridge_time_s < gw_b.stats.bridge_time_s
+        assert piped.stats.pipelined_restores == 1
+        assert piped.stats.restore_overlap_s > 0
+        assert piped.stats.restore_fill_s == pytest.approx(
+            gw_p.stats.bridge_time_s)
+
+    def test_chunks_spread_across_channels_and_conform(self):
+        gw, mgr = self._manager(True)
+        with TraceRecorder(gw, label="restore") as rec:
+            mgr.restore(list(range(16)))
+        tape = rec.tape()
+        recs = [r for r in tape.records
+                if r.op_class == oc.KV_RESTORE_PIPELINED]
+        assert len(recs) == 16                       # 1 MiB / 64 KiB chunks
+        assert sum(r.nbytes for r in recs) == 16 * (64 << 10)
+        assert len({r.channel for r in recs}) > 1    # double-buffered
+        assert all(not r.charged for r in recs)
+        assert check_tape(tape).ok
+
+    def test_single_context_pool_falls_back_to_bulk(self):
+        gw, mgr = self._manager(True, workers=1)
+        mgr.restore(list(range(4)))
+        assert mgr.stats.pipelined_restores == 0
+        assert any(r.op_class == oc.KV_RESTORE_H2D for r in gw.records)
+
+    def test_pipelined_h2d_conserves_bytes(self):
+        gw = _gw(workers=2)
+        gw.pool.prewarm()
+        payloads = [np.zeros(100_000, np.uint8) for _ in range(3)]
+        arrays, res = pipelined_h2d(gw, payloads, chunk_bytes=64 << 10)
+        assert res.total_bytes == 300_000
+        assert res.n_chunks == 5
+        assert len(arrays) == 3
+        assert res.fill_s > 0 and res.done_t >= gw.clock.now
+
+
+class TestEngineWithBridgeOpt:
+    @pytest.fixture(scope="class")
+    def model(self):
+        from repro.trace.harness import smoke_model
+        return smoke_model()
+
+    def _run(self, model, bridge_opt):
+        from repro.serving.engine import Request, ServingEngine
+        from repro.serving.sampler import SamplingParams
+        defaults = cc_aware_defaults(True, bridge_opt=bridge_opt)
+        engine = ServingEngine(model, max_batch=4, max_len=64,
+                               policy=SP.ASYNC_OVERLAP,
+                               bridge=BridgeModel(B300, cc_on=True),
+                               defaults=defaults, seed=0)
+        recorder = TraceRecorder(engine.gateway, policy="async").attach()
+        try:
+            for i in range(4):
+                engine.submit(Request(f"r{i}", prompt=[1, 2, 3],
+                                      sampling=SamplingParams(max_new_tokens=5)))
+            engine.run()
+        finally:
+            recorder.detach()
+            engine.close()
+        return engine, recorder.tape()
+
+    def test_bridge_opt_engine_beats_async_baseline(self, model):
+        base_engine, base_tape = self._run(model, bridge_opt=False)
+        opt_engine, opt_tape = self._run(model, bridge_opt=True)
+        # same tokens out (the optimization is cost-model + staging only)
+        base_tokens = [r.output_tokens for r in base_engine.finished]
+        opt_tokens = [r.output_tokens for r in opt_engine.finished]
+        assert base_tokens == opt_tokens
+        assert (opt_engine.gateway.stats.bridge_time_s
+                < base_engine.gateway.stats.bridge_time_s / 10)
+        assert opt_tape.fresh_share() < base_tape.fresh_share()
+        assert check_tape(opt_tape).ok and check_tape(base_tape).ok
+        assert opt_engine.gateway.arena.stats.hits > 0
+        assert opt_engine.coalescer.stats.crossings_saved > 0
+        # nothing left queued after run()
+        assert opt_engine.coalescer.pending() == 0
+
+
+class TestReplicaArenaInventory:
+    def test_replica_exports_arena_stats(self):
+        from repro.cluster.budget import SecureContextBudget
+        from repro.cluster.replica import Replica, ReplicaConfig
+        from repro.core.fabric import FabricManager
+        from repro.serving.engine import Request
+        from repro.serving.sampler import SamplingParams
+        from repro.trace.harness import smoke_model
+        bridge = BridgeModel(TPU_V5E, cc_on=True)
+        fabric = FabricManager(bridge.profile, n_devices=8)
+        tenant = fabric.activate("t0", 2)
+        budget = SecureContextBudget(bridge.profile, cc_on=True)
+        lease = budget.acquire("r0", 4)
+        replica = Replica("r0", smoke_model(), tenant, lease, bridge,
+                          ReplicaConfig(max_batch=2, max_len=48))
+        try:
+            replica.submit(Request("q0", prompt=list(range(1, 17)),
+                                   sampling=SamplingParams(max_new_tokens=2)))
+            while replica.pending():
+                replica.tick()
+            st = replica.stats()
+            assert st["arena"] is not None
+            assert st["arena"]["hits"] > 0
+            assert 0.0 <= st["arena"]["hit_rate"] <= 1.0
+            assert st["arena"]["pinned_bytes"] <= st["arena"]["capacity_bytes"]
+            assert replica.metrics().arena_hit_rate == st["arena"]["hit_rate"]
+            assert check_tape(replica.tape()).ok
+        finally:
+            replica.close()
+
+
+class TestLoaderArenaStaging:
+    def test_arena_collapses_per_shard_fresh_toll(self, tmp_path):
+        from repro.loader.pooled_loader import LoaderVariant, PooledLoader
+        from repro.loader.sharded_weights import ShardedCheckpoint, save_sharded
+        tensors = {f"w{i}": np.random.default_rng(i).standard_normal(
+            (32, 8)).astype(np.float32) for i in range(8)}
+        save_sharded(str(tmp_path / "ckpt"), tensors, n_shards=4)
+        ckpt = ShardedCheckpoint(str(tmp_path / "ckpt"))
+        bridge = BridgeModel(TPU_V5E, cc_on=True)
+
+        def load(arena):
+            gw = _gw(workers=8)
+            loader = PooledLoader(bridge, n_workers=8, gateway=gw, arena=arena)
+            with TraceRecorder(gw, label="loader") as rec:
+                loaded, breakdown = loader.load(ckpt, LoaderVariant.PREWARMED)
+            return loaded, breakdown, rec.tape()
+
+        plain_loaded, plain, _ = load(None)
+        arena_loaded, opt, tape = load(StagingArena(1 << 24))
+        # equal-sized shards share one slab class: 1 fresh + 3 warm tolls
+        p = bridge.profile
+        expected = (p.cc_fresh_toll + p.cc_fresh_alloc
+                    + (ckpt.n_shards - 1) * p.cc_registered_toll)
+        assert opt["toll"] == pytest.approx(expected)
+        assert opt["toll"] < plain["toll"] / 2
+        shard_recs = [r for r in tape.records
+                      if r.op_class == oc.LOADER_SHARD_H2D]
+        assert [r.staging for r in shard_recs] == (
+            ["fresh"] + ["registered"] * (ckpt.n_shards - 1))
+        # the per-shard gateway charge still sums to the modeled components
+        assert sum(r.duration_s for r in shard_recs) == pytest.approx(
+            opt["transfer"] + opt["toll"], rel=1e-9)
+        assert check_tape(tape).ok
+        for name, arr in tensors.items():
+            np.testing.assert_array_equal(np.asarray(arena_loaded[name]), arr)
+            np.testing.assert_array_equal(np.asarray(plain_loaded[name]), arr)

@@ -1,0 +1,193 @@
+"""Property-based tests for the bridge_opt subsystem.
+
+The arena and the coalescer are small state machines whose invariants carry
+the whole optimization claim: the arena must never pin more than its budget
+(pinned host memory is the resource being modeled) and must evict in LRU
+order (otherwise "persistent staging" silently becomes "thrashing
+staging"); the coalescer must conserve every queued crossing's bytes and
+count across flushes and must never drop a queued crossing at a barrier —
+a lost crossing would silently under-charge the bridge and invalidate every
+recovered-fraction number built on top.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from collections import OrderedDict
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.bridge_opt import CrossingCoalescer, StagingArena
+from repro.core.bridge import TPU_V5E, BridgeModel, Direction, StagingKind
+from repro.core.gateway import TransferGateway
+from repro.core.policy import cc_aware_defaults
+from repro.trace import opclasses as oc
+
+
+def _gateway(arena=None):
+    return TransferGateway(BridgeModel(TPU_V5E, cc_on=True),
+                           cc_aware_defaults(True), pool_workers=1,
+                           arena=arena)
+
+
+# ---------------------------------------------------------------------------------
+# StagingArena
+# ---------------------------------------------------------------------------------
+
+CAPACITIES = [256, 1024, 4096]
+arena_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("acquire"), st.integers(min_value=1, max_value=8192)),
+        st.tuples(st.just("prewarm"), st.integers(min_value=1, max_value=8192)),
+    ),
+    min_size=1, max_size=60)
+
+
+class TestArenaProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(cap=st.sampled_from(CAPACITIES), ops=arena_ops)
+    def test_pinned_bytes_never_exceed_the_cap(self, cap, ops):
+        arena = StagingArena(cap, min_class_bytes=64)
+        for op, size in ops:
+            if op == "acquire":
+                arena.acquire(size)
+            else:
+                arena.prewarm([size])
+            assert arena.stats.pinned_bytes <= cap
+            assert arena.stats.high_water_bytes <= cap
+            assert arena.stats.pinned_bytes == sum(arena.registered_classes())
+
+    @settings(max_examples=40, deadline=None)
+    @given(cap=st.sampled_from(CAPACITIES), ops=arena_ops)
+    def test_matches_lru_reference_machine(self, cap, ops):
+        """Arena decisions == an independent LRU model: hits refresh
+        recency, misses pin (evicting least-recently-used first), oversize
+        classes never pin."""
+        arena = StagingArena(cap, min_class_bytes=64)
+        model: "OrderedDict[int, None]" = OrderedDict()   # class -> (LRU order)
+
+        def model_reserve(cls):
+            pinned = sum(model)
+            while pinned + cls > cap:
+                victim, _ = model.popitem(last=False)
+                pinned -= victim
+            model[cls] = None
+
+        for op, size in ops:
+            cls = arena.size_class(size)
+            if op == "acquire":
+                kind, tag = arena.acquire(size)
+                if cls > cap:
+                    expected = StagingKind.FRESH
+                elif cls in model:
+                    expected = StagingKind.REGISTERED
+                    model.move_to_end(cls)
+                else:
+                    expected = StagingKind.FRESH
+                    model_reserve(cls)
+                assert kind is expected, (size, cls, list(model))
+                assert tag == (oc.ARENA_HIT if expected is StagingKind.REGISTERED
+                               else oc.ARENA_MISS)
+            else:
+                arena.prewarm([size])
+                if cls <= cap and cls not in model:
+                    model_reserve(cls)
+            assert arena.registered_classes() == list(model)
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=arena_ops)
+    def test_oversize_never_pins_and_is_counted(self, ops):
+        arena = StagingArena(256, min_class_bytes=64)
+        for op, size in ops:
+            if op == "acquire":
+                arena.acquire(size)
+            else:
+                arena.prewarm([size])
+            assert all(c <= 256 for c in arena.registered_classes())
+        big = [s for op, s in ops if op == "acquire"
+               and arena.size_class(s) > 256]
+        assert arena.stats.oversize == len(big)
+
+
+# ---------------------------------------------------------------------------------
+# CrossingCoalescer
+# ---------------------------------------------------------------------------------
+
+coalescer_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("h2d"), st.integers(min_value=1, max_value=600)),
+        st.tuples(st.just("d2h"), st.integers(min_value=1, max_value=600)),
+        st.tuples(st.just("charge"), st.integers(min_value=1, max_value=600)),
+        st.tuples(st.just("flush"), st.just(0)),
+        st.tuples(st.just("big"), st.integers(min_value=2000, max_value=9000)),
+    ),
+    min_size=1, max_size=50)
+
+
+def _drive(co, op, size):
+    if op == "h2d":
+        co.h2d(np.zeros(size, np.uint8), op_class="p")
+    elif op == "d2h":
+        co.d2h(np.zeros(size, np.uint8), op_class="d")
+    elif op == "charge":
+        co.charge(size, Direction.D2H, op_class="c")
+    elif op == "big":
+        co.h2d(np.zeros(size, np.uint8), op_class="big")
+    else:
+        co.flush()
+
+
+class TestCoalescerProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(ops=coalescer_ops)
+    def test_flushes_conserve_bytes_and_crossing_count(self, ops):
+        gw = _gateway()
+        co = CrossingCoalescer(gw, threshold_bytes=1024, watermark_bytes=1500,
+                               max_queued=8)
+        for op, size in ops:
+            _drive(co, op, size)
+            # at every point: everything queued is either still pending or
+            # was flushed — nothing is dropped, nothing invented
+            s = co.stats
+            assert s.fused_crossings + co.pending() == s.queued
+            assert (s.fused_bytes
+                    + co.pending_bytes(Direction.H2D)
+                    + co.pending_bytes(Direction.D2H)) == s.queued_bytes
+        co.barrier()
+        s = co.stats
+        assert co.pending() == 0
+        assert s.fused_crossings == s.queued
+        assert s.fused_bytes == s.queued_bytes
+        # the tape agrees: fused crossings carry exactly the queued bytes
+        fused_rec_bytes = sum(r.nbytes for r in gw.records
+                              if r.op_class in (oc.COALESCED_H2D,
+                                                oc.COALESCED_D2H))
+        assert fused_rec_bytes == s.queued_bytes
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops=coalescer_ops)
+    def test_queue_bounds_hold_after_every_submission(self, ops):
+        gw = _gateway()
+        co = CrossingCoalescer(gw, threshold_bytes=1024, watermark_bytes=1500,
+                               max_queued=8)
+        for op, size in ops:
+            _drive(co, op, size)
+            for d in (Direction.H2D, Direction.D2H):
+                assert co.pending(d) < co.max_queued
+                assert co.pending_bytes(d) < co.watermark_bytes
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=coalescer_ops)
+    def test_coalesced_stream_is_conformant(self, ops):
+        from repro.trace import TraceRecorder, check_tape
+        gw = _gateway(arena=StagingArena(1 << 20))
+        co = CrossingCoalescer(gw, threshold_bytes=1024, watermark_bytes=1500,
+                               max_queued=8)
+        with TraceRecorder(gw, label="property") as rec:
+            for op, size in ops:
+                _drive(co, op, size)
+            co.barrier()
+        report = check_tape(rec.tape())
+        assert report.ok, report.format()
