@@ -1,32 +1,47 @@
-"""bridge_opt ablation ladder: arena x coalescer x pipelined restore.
+"""bridge_opt ablation ladder: arena x coalescer x pipelined restore,
+plus the compute-charged §5.5 scheduling ladder and the overlap guardrail.
 
-One real engine workload on the B300 CC-on profile, run under the
-vLLM-default discipline (ASYNC_OVERLAP — the paper's degraded baseline),
-then re-run with the transfer-optimization subsystem enabled rung by rung:
+Part 1 (PR 3): one real engine workload on the B300 CC-on profile, run
+under the vLLM-default discipline (ASYNC_OVERLAP — the paper's degraded
+baseline), then re-run with the transfer-optimization subsystem enabled
+rung by rung:
 
   all_off          fresh staging per small crossing (the 44x class)
   coalescer        sub-threshold crossings fuse; flush buffers first-touch
   arena_coalescer  flush buffers come from the budgeted staging arena
   all_on           arena prewarmed + pipelined chunked KV restore
 
-The gold reference is the all_off crossing stream re-priced CC-off
-(TraceReplayer — the §5.2 method, never a second noisy run).  The headline
-row is the recovered fraction of the modeled dense-decode CC gap, checked
-against the paper's 57% (scheduling flag) / 92% (worker drain) recovery
-ladder; the attribution row asserts the fresh-staging share of each rung's
-tape strictly decreases down the ladder — the subsystem removes exactly
-the op class the paper says closes the gap.
+Part 2 (ISSUE 4): the same engine with decode/prefill compute charged to
+the virtual clock — priced against the paper's own serving config
+(qwen3.6-27B on B300, the §5.2 profiling cell) while executing the smoke
+model — swept across concurrency under the paper's §5.4–§5.5 recovery
+ladder:
 
-An `arena`-only variant (outside the strict ladder) provides the
-uncoalesced-but-staged decode baseline for the CI perf guardrail:
-coalesced decode bridge time must never exceed it.
+  async_base        vLLM default (fresh staging, blocking "non-blocking")
+  sched_flag        the one-flag fix (SYNC_DRAIN; paper recovers 57%)
+  worker_coalescer  worker drain composed with the coalescer (paper's v10c
+                    recovers up to 92% at high concurrency)
+
+Gold is always the async_base stream re-priced CC-off by TraceReplayer
+(the §5.2 method, never a second noisy run); recovered fractions are of
+the modeled CC gap *including* compute, which is what makes the ladder a
+statement about hideability rather than about toll arithmetic.  The
+deadline-flush count is reported because it is the observable proof that
+the coalescer's latency bound is now driven by compute charges.
+
+Part 3: the restore-overlap guardrail — the same workload with a pipelined
+restore in flight, overlap preference on vs off; on must never lose.
 """
 
 from __future__ import annotations
 
+import dataclasses
+
+from repro.configs.base import get_config
 from repro.core.bridge import B300, BridgeModel
+from repro.core.compute import ComputeModel
 from repro.core.policy import (OffloadPolicy, RuntimeDefaults,
-                               SchedulingPolicy as SP)
+                               SchedulingPolicy as SP, cc_aware_defaults)
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.offload import HostBlock, OffloadManager
 from repro.serving.sampler import SamplingParams
@@ -127,6 +142,164 @@ def run_variant(model, name: str) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------------
+# Part 2: the compute-charged §5.5 scheduling ladder (ISSUE 4)
+# ---------------------------------------------------------------------------------
+
+#: the paper's own serving config prices the compute side of every step
+PAPER_MODEL = "qwen3p6-27b"
+#: concurrency sweep (batch slots, all kept busy); the §5.5 claim is at the
+#: high end — worker composition amortizes, the one-flag fix does not
+LADDER_CONCURRENCY = (2, 8)
+
+
+def run_ladder_variant(model, policy: SP, *, concurrency: int,
+                       bridge_opt: bool) -> dict:
+    """One compute-charged engine run under `policy` at `concurrency`."""
+    bridge = BridgeModel(B300, cc_on=True)
+    defaults = dataclasses.replace(
+        _defaults(ARENA_BYTES if bridge_opt else 0, bridge_opt, False),
+        scheduling=policy)
+    engine = ServingEngine(
+        model, max_batch=concurrency, max_len=64, policy=policy,
+        bridge=bridge, defaults=defaults,
+        compute_model=ComputeModel(get_config(PAPER_MODEL), bridge),
+        seed=0)
+    gw = engine.gateway
+    gw.pool.prewarm()
+    recorder = TraceRecorder(
+        gw, policy=policy.value,
+        label=f"ladder-{policy.value}-c{concurrency}").attach()
+    try:
+        for i in range(concurrency):
+            engine.submit(Request(
+                f"r{i}", prompt=list(PROMPT),
+                sampling=SamplingParams(max_new_tokens=MAX_NEW_TOKENS)))
+        engine.run()
+        tape = recorder.tape()
+    finally:
+        recorder.detach()
+        engine.close()
+    co = engine.coalescer
+    return {
+        "total_s": engine.clock.now,
+        "tokens": sum(len(r.output_tokens) for r in engine.finished),
+        "compute_s": gw.stats.compute_time_s,
+        "bridge_s": gw.stats.bridge_time_s,
+        "tape": tape,
+        "deadline_flushes": co.stats.deadline_flushes if co else 0,
+        "worker_flushes": co.stats.worker_flushes if co else 0,
+        "conformance_ok": check_tape(tape).ok,
+    }
+
+
+def scheduling_ladder_rows(model) -> list[str]:
+    """§5.4/§5.5 against a clock that charges compute: the one-flag fix
+    recovers >= 0.57 of the modeled CC gap; worker x coalescer strictly
+    more at high concurrency, with the deadline trigger observably firing."""
+    lines = []
+    recovered = {}
+    high_c = max(LADDER_CONCURRENCY)
+    for c in LADDER_CONCURRENCY:
+        base = run_ladder_variant(model, SP.ASYNC_OVERLAP,
+                                  concurrency=c, bridge_opt=False)
+        sched = run_ladder_variant(model, SP.SYNC_DRAIN,
+                                   concurrency=c, bridge_opt=False)
+        worker = run_ladder_variant(model, SP.WORKER_DRAIN,
+                                    concurrency=c, bridge_opt=True)
+        gold = TraceReplayer(base["tape"]).reprice(
+            ReplaySpec(cc_on=False)).total_replayed_s
+        gap = base["total_s"] - gold
+        recovered[c] = {
+            "sched_flag": (base["total_s"] - sched["total_s"]) / max(gap, 1e-12),
+            "worker_coalescer": (base["total_s"] - worker["total_s"]) / max(gap, 1e-12),
+        }
+        lines.append(
+            f"bridge_opt/ladder_c{c}_base_total_s,{base['total_s']:.6f},"
+            f"compute={base['compute_s']:.4f}s bridge={base['bridge_s']:.4f}s "
+            f"gold={gold:.6f}s ({PAPER_MODEL}-priced compute)")
+        lines.append(
+            f"bridge_opt/ladder_c{c}_sched_flag_recovered,"
+            f"{recovered[c]['sched_flag']:.4f},paper=0.57 (one-flag fix)")
+        lines.append(
+            f"bridge_opt/ladder_c{c}_worker_coalescer_recovered,"
+            f"{recovered[c]['worker_coalescer']:.4f},"
+            f"paper=up to 0.92 (v10c; worker flushes the D2H queue: "
+            f"{worker['worker_flushes']} fused drains off the engine clock)")
+        if c == high_c:
+            lines.append(
+                f"bridge_opt/ladder_deadline_flushes,"
+                f"{float(worker['deadline_flushes']):.1f},"
+                f"coalescer latency bound driven by compute charges "
+                f"(must be > 0)")
+            lines.append(
+                f"bridge_opt/ladder_conformance_pass,"
+                f"{float(all(v['conformance_ok'] for v in (base, sched, worker))):.1f},"
+                f"L1-L4 + compute/crossing edge over all c={c} rung tapes")
+    ordered = (recovered[high_c]["worker_coalescer"]
+               > recovered[high_c]["sched_flag"])
+    lines.append(
+        f"bridge_opt/ladder_worker_beats_flag_at_high_c,{float(ordered):.1f},"
+        f"c={high_c}: worker {recovered[high_c]['worker_coalescer']:.4f} vs "
+        f"flag {recovered[high_c]['sched_flag']:.4f} (strictly more)")
+    return lines
+
+
+# ---------------------------------------------------------------------------------
+# Part 3: restore-overlap guardrail (overlap-on must never lose)
+# ---------------------------------------------------------------------------------
+
+#: guardrail restore shape: a warm prefix deep enough that its pipeline
+#: drain outlasts one 27B decode step (toll-dominated small chunks), so the
+#: overlap preference has a window actually worth scheduling into
+GUARDRAIL_BLOCKS = 96
+GUARDRAIL_BLOCK_BYTES = 128 << 10
+GUARDRAIL_CHUNK_BYTES = 8 << 10
+
+
+def overlap_guardrail_rows(model) -> list[str]:
+    def run_once(prefer: bool) -> dict:
+        bridge = BridgeModel(B300, cc_on=True)
+        defaults = dataclasses.replace(
+            _defaults(ARENA_BYTES, True, True), overlap_scheduler=prefer)
+        engine = ServingEngine(
+            model, max_batch=2, max_len=64, policy=SP.SYNC_DRAIN,
+            bridge=bridge, defaults=defaults,
+            compute_model=ComputeModel(get_config(PAPER_MODEL), bridge),
+            seed=0)
+        gw = engine.gateway
+        gw.pool.prewarm()
+        mgr = OffloadManager(gw, OffloadPolicy.REUSE_AWARE,
+                             pipelined_restore=True,
+                             restore_chunk_bytes=GUARDRAIL_CHUNK_BYTES)
+        for b in range(GUARDRAIL_BLOCKS):
+            mgr.host_store[b] = HostBlock(b, GUARDRAIL_BLOCK_BYTES, 2, None)
+        mgr.restore(list(range(GUARDRAIL_BLOCKS)))
+        engine.mark_restore("warm", mgr.last_restore_done_t)
+        for rid in ("warm", "cold"):
+            engine.submit(Request(
+                rid, prompt=list(PROMPT),
+                sampling=SamplingParams(max_new_tokens=MAX_NEW_TOKENS)))
+        stats = engine.run()
+        engine.close()
+        return stats
+
+    on, off = run_once(True), run_once(False)
+    tps_on = on["total_tokens"] / max(on["virtual_time_s"], 1e-12)
+    tps_off = off["total_tokens"] / max(off["virtual_time_s"], 1e-12)
+    return [
+        f"bridge_opt/overlap_on_decode_tps,{tps_on:.4f},"
+        f"restore window filled with decode compute "
+        f"(deferred={on['overlap']['deferred_admissions']}, "
+        f"barrier_wait={on['overlap']['barrier_wait_s']:.6f}s)",
+        f"bridge_opt/overlap_off_decode_tps,{tps_off:.4f},"
+        f"restore window paid as idle barrier wait "
+        f"(barrier_wait={off['overlap']['barrier_wait_s']:.6f}s)",
+        f"bridge_opt/overlap_guardrail_ok,{float(tps_on >= tps_off):.1f},"
+        f"overlap-on decode throughput must never lose under CC-on defaults",
+    ]
+
+
 def run() -> list[str]:
     model = smoke_model()
     results = {name: run_variant(model, name) for name in VARIANTS}
@@ -205,6 +378,8 @@ def run() -> list[str]:
     lines.append(
         f"bridge_opt/conformance_pass,{float(conf_ok):.4f},"
         f"L1-L4 over all {len(results)} rung tapes")
+    lines.extend(scheduling_ladder_rows(model))
+    lines.extend(overlap_guardrail_rows(model))
     return lines
 
 

@@ -175,10 +175,45 @@ def worker_drain_rows() -> list[tuple[str, float, str]]:
     return out
 
 
+def compute_window_rows() -> list[tuple[str, float, str]]:
+    """The hideability law (Hopper CC study, arXiv 2409.03992): whether CC
+    overhead can be hidden is the compute/crossing ratio.  One decode
+    step's compute window (ComputeModel, qwen3.6-27B on B300) against the
+    step's crossing overhead under each discipline, swept over the §5.5
+    concurrencies: async's fresh-staged crossings outgrow the window (the
+    inversion is structural), sync's drained crossings vanish inside it."""
+    from repro.configs.base import get_config
+    from repro.core.bridge import Crossing, Direction, StagingKind
+    from repro.core.compute import ComputeModel
+
+    on = BridgeModel(B300, cc_on=True)
+    cm = ComputeModel(get_config("qwen3p6-27b"), on)
+    out = []
+    for c, w in W.sweep_workloads().items():
+        window = cm.decode_step_s(c)
+        fresh = on.crossing_time(
+            Crossing(w.small_bytes, Direction.H2D, StagingKind.FRESH))
+        reg = on.crossing_time(
+            Crossing(w.small_bytes, Direction.H2D, StagingKind.REGISTERED))
+        drain = on.crossing_time(
+            Crossing(w.drain_bytes, Direction.D2H, StagingKind.REGISTERED))
+        async_bridge = w.n_small_h2d * fresh + drain
+        sync_bridge = w.n_small_h2d * reg + drain
+        out.append((f"5.5/c{c}_hideable_ratio_async",
+                    window / async_bridge,
+                    f"compute window {window*1e3:.2f}ms vs fresh-staged "
+                    f"crossings {async_bridge*1e3:.2f}ms (<1: unhideable)"))
+        out.append((f"5.5/c{c}_hideable_ratio_sync",
+                    window / sync_bridge,
+                    f"same window vs drained crossings "
+                    f"{sync_bridge*1e3:.2f}ms (>1: the bridge hides)"))
+    return out
+
+
 def run() -> list[str]:
     lines = []
     for fn in (serving_matrix_rows, accounting_rows, patch_refutation_rows,
-               inversion_rows, worker_drain_rows):
+               inversion_rows, worker_drain_rows, compute_window_rows):
         for name, val, derived in fn():
             lines.append(f"serving/{name},{val:.4f},{derived}")
     return lines

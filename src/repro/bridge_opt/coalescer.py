@@ -8,10 +8,16 @@ and flush as ONE fused REGISTERED crossing when any trigger fires:
   * watermark  — queued bytes reach `watermark_bytes` (the flush buffer
                  is full),
   * deadline   — the oldest queued crossing has waited `deadline_s` on the
-                 virtual clock (latency bound),
+                 virtual clock (latency bound).  With the engine charging
+                 decode compute to the clock (core.compute, DESIGN.md §7)
+                 this trigger is live in steady-state serving: every step's
+                 forward moves time, so queued drains age and flush within
+                 the deadline instead of waiting for the queue cap.  Call
+                 sites that charge non-crossing time must `poll()` after
+                 the charge so aged queues flush promptly,
   * queue cap  — the coalescer's index table is full (`max_queued`
-                 entries; the bound that keeps deferral finite when the
-                 virtual clock is quiet between flushes),
+                 entries; a backstop — with compute charged the deadline
+                 fires first, which is why the cap is tight),
   * barrier    — an explicit flush (engine run end / close / caller sync).
 
 Data still moves immediately (`device_put` / `np.asarray` — callers get
@@ -39,7 +45,7 @@ from typing import TYPE_CHECKING, Any, Optional
 import jax
 import numpy as np
 
-from repro.core.bridge import Direction, StagingKind
+from repro.core.bridge import Crossing, Direction, StagingKind
 from repro.trace import opclasses as oc
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -65,10 +71,19 @@ class CoalescerStats:
     #: flush count per trigger ("watermark"/"deadline"/"queue_cap"/"barrier")
     flushes: dict = field(default_factory=dict)
     max_queue_depth: int = 0
+    #: D2H flushes taken by the worker channel instead of the engine clock
+    #: (worker-drain x coalescer composition)
+    worker_flushes: int = 0
+    #: engine-clock seconds charged for worker flush handoffs
+    worker_handoff_s: float = 0.0
 
     @property
     def n_flushes(self) -> int:
         return sum(self.flushes.values())
+
+    @property
+    def deadline_flushes(self) -> int:
+        return self.flushes.get("deadline", 0)
 
     @property
     def crossings_saved(self) -> int:
@@ -83,14 +98,24 @@ class CrossingCoalescer:
                  threshold_bytes: int = 4096,
                  watermark_bytes: int = 32 << 10,
                  deadline_s: float = 500e-6,
-                 max_queued: int = 64):
+                 max_queued: int = 32,
+                 worker_flush: bool = False,
+                 worker_handoff_s: float = 20e-6):
         if threshold_bytes <= 0 or watermark_bytes <= 0 or max_queued < 1:
             raise ValueError("coalescer thresholds must be positive")
+        if worker_handoff_s < 0:
+            raise ValueError("worker handoff cost cannot be negative")
         self.gateway = gateway
         self.threshold_bytes = int(threshold_bytes)
         self.watermark_bytes = int(watermark_bytes)
         self.deadline_s = float(deadline_s)
         self.max_queued = int(max_queued)
+        #: worker-drain x coalescer composition: D2H flushes serialize on a
+        #: secure channel (the worker thread's seat) instead of the engine
+        #: clock; the engine pays only a small handoff per flush.  H2D
+        #: flushes gate the next forward's inputs and stay on the engine.
+        self.worker_flush = bool(worker_flush)
+        self.worker_handoff_s = float(worker_handoff_s)
         self._q: dict[Direction, list[_Pending]] = {
             Direction.H2D: [], Direction.D2H: []}
         #: directions whose flush buffer exists (no-arena staging machine)
@@ -116,7 +141,9 @@ class CrossingCoalescer:
         if nbytes > self.threshold_bytes:
             self.stats.passthrough += 1
             self.stats.passthrough_bytes += nbytes
-            return self.gateway.h2d(arr, op_class=op_class, reuse_staging=True)
+            dev = self.gateway.h2d(arr, op_class=op_class, reuse_staging=True)
+            self.poll()   # the passthrough charge moved the clock
+            return dev
         dev = jax.device_put(arr, self.gateway.device)
         self._enqueue(nbytes, Direction.H2D, op_class)
         return dev
@@ -131,7 +158,9 @@ class CrossingCoalescer:
         if nbytes > self.threshold_bytes:
             self.stats.passthrough += 1
             self.stats.passthrough_bytes += nbytes
-            return self.gateway.d2h(device_array, op_class=op_class)
+            host = self.gateway.d2h(device_array, op_class=op_class)
+            self.poll()   # the passthrough charge moved the clock
+            return host
         host = np.asarray(device_array)
         self._enqueue(nbytes, Direction.D2H, op_class)
         return host
@@ -143,14 +172,13 @@ class CrossingCoalescer:
             self.stats.passthrough += 1
             self.stats.passthrough_bytes += nbytes
             self.gateway.charge_crossing(nbytes, direction, op_class=op_class)
+            self.poll()   # the passthrough charge moved the clock
             return
         self._enqueue(nbytes, direction, op_class)
 
     def _enqueue(self, nbytes: int, direction: Direction, op_class: str) -> None:
+        self.poll()                 # aged queues flush before the append
         q = self._q[direction]
-        now = self.gateway.clock.now
-        if q and now - q[0].enqueued_t >= self.deadline_s:
-            self.flush(direction, trigger="deadline")
         q.append(_Pending(nbytes, op_class, self.gateway.clock.now))
         self.stats.queued += 1
         self.stats.queued_bytes += nbytes
@@ -159,6 +187,23 @@ class CrossingCoalescer:
             self.flush(direction, trigger="watermark")
         elif len(q) >= self.max_queued:
             self.flush(direction, trigger="queue_cap")
+
+    def poll(self) -> float:
+        """Fire the deadline trigger against the current virtual clock.
+
+        Submissions check the deadline themselves; any call site that moves
+        the clock *without* submitting — above all the engine's per-step
+        compute charge — polls afterwards so queued crossings flush within
+        `deadline_s` of enqueue under any interleaving of charges (the
+        property the hypothesis suite pins).  Returns the bridge time
+        charged to the engine clock.
+        """
+        charged = 0.0
+        now = self.gateway.clock.now
+        for d, q in self._q.items():
+            if q and now - q[0].enqueued_t >= self.deadline_s:
+                charged += self.flush(d, trigger="deadline")
+        return charged
 
     # -- flush -------------------------------------------------------------------------
 
@@ -186,11 +231,31 @@ class CrossingCoalescer:
             n = len(q)
             q.clear()
             staging, tags = self._flush_staging(d)
-            charged += self.gateway.charge_crossing(
-                total, d, staging=staging, op_class=self.OP_CLASS[d], tags=tags)
+            if self.worker_flush and d is Direction.D2H:
+                # composition (ROADMAP "worker drain x coalescer"): the
+                # worker thread owns the fused drain — it serializes on a
+                # secure channel (L1 holds there) while the engine pays only
+                # the handoff; token values were already materialized at
+                # d2h() time, so nothing downstream waits on the flush.
+                self.gateway.pooled_crossing(
+                    Crossing(total, d, staging),
+                    op_class=self.OP_CLASS[d], tags=tags)
+                self.gateway.clock.advance(self.worker_handoff_s)
+                self.stats.worker_flushes += 1
+                self.stats.worker_handoff_s += self.worker_handoff_s
+                charged += self.worker_handoff_s
+            else:
+                charged += self.gateway.charge_crossing(
+                    total, d, staging=staging, op_class=self.OP_CLASS[d],
+                    tags=tags)
             self.stats.fused_crossings += n
             self.stats.fused_bytes += total
             self.stats.flushes[trigger] = self.stats.flushes.get(trigger, 0) + 1
+        if charged > 0:
+            # the flush charge itself moved the clock: re-check every queue
+            # so no queued crossing silently outlives its deadline
+            # (recursion terminates — a flushed queue is empty)
+            charged += self.poll()
         return charged
 
     def barrier(self) -> float:

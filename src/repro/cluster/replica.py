@@ -39,6 +39,7 @@ from repro.serving.engine import Request, ServingEngine
 from repro.serving.kv_cache import PagePool
 from repro.serving.offload import OffloadManager
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.trace import opclasses as oc
 from repro.trace.recorder import TraceRecorder
 from repro.trace.tape import BridgeTape
 
@@ -194,9 +195,22 @@ class Replica:
         if warm:
             hits, _ = self.offload.restore(warm)
             self.warm_blocks_restored += hits
+            # pipelined restores land after clock.now: the engine must
+            # barrier before first KV read, and — overlap preference on —
+            # prefers filling the drain window with other decode work
+            self.engine.mark_restore(req.request_id,
+                                     self.offload.last_restore_done_t)
         warm_tokens = len(warm) * self.cfg.block_tokens
         cold_tokens = max(0, len(req.prompt) - warm_tokens)
-        self.clock.advance(cold_tokens * self.cfg.prefill_ms_per_token * MS)
+        if cold_tokens:
+            # the replica owns admission-time prompt pricing (its coarse
+            # per-token model); tape-visible as a compute record so replay
+            # attribution sees the full admission anatomy
+            self.gateway.charge_compute(
+                cold_tokens * self.cfg.prefill_ms_per_token * MS,
+                op_class=oc.PREFILL_COMPUTE)
+        # the engine charges compute only for tokens not priced here
+        req.warm_tokens = len(req.prompt)
         self.scheduler.submit(req)
         # TTFT window starts at arrival, before the admission-path charges
         req.enqueue_t = t0

@@ -4,6 +4,8 @@ CC-aware serving runtime built on it.
 Layers (each applies the law at a different level of the stack):
   bridge.py      — the law itself + calibrated platform profiles
   channels.py    — secure contexts: pooling, lifecycle economics, virtual clock
+  compute.py     — roofline pricing of prefill/decode steps (the clock's
+                   compute charges; the other side of the hideability ratio)
   simulator.py   — decode-step pipeline model: policy inversion + recovery
   policy.py      — scheduling/offload policy vocabulary, CC-aware defaults
   accounting.py  — profiler attribution loop (closes the gap to op classes)
@@ -16,6 +18,8 @@ from .bridge import (
     BridgeModel, BridgeProfile, Crossing, Direction, StagingKind, bridge_pair,
 )
 from .channels import SecureChannelPool, SecureContext, VirtualClock
+from .compute import (COMPUTE_SPECS, ComputeCharge, ComputeModel,
+                      ComputeSpec)
 from .policy import (
     OffloadPolicy, PolicyOutcome, RuntimeDefaults, SchedulingPolicy,
     cc_aware_defaults, detect_inversion, recovered_fraction,

@@ -42,6 +42,10 @@ class CopyRecord:
     charged: bool = True        # False: wall-clock charge accounted elsewhere
     #: free-form provenance tags (e.g. arena_hit/arena_miss staging outcome)
     tags: tuple = ()
+    #: interval kind: "crossing" (bridge traffic) or "compute" (device-local
+    #: prefill/decode work priced by core.compute.ComputeModel — no bytes
+    #: cross the bridge; direction/staging are empty by construction)
+    kind: str = "crossing"
 
 
 @dataclass

@@ -1,0 +1,148 @@
+"""ComputeModel — per-step prefill/decode compute as a virtual-clock charge.
+
+The paper's recovery story (§5.4–§5.5) only exists because decode compute
+gives the bridge a window to hide crossings in: the scheduling flag recovers
+57% and the worker-thread drain up to 92% *of a gap measured against steps
+that spend most of their time in the forward pass*.  The Hopper CC benchmark
+study (arXiv 2409.03992) makes the same point from the other side — whether
+CC overhead is hideable is exactly the compute/crossing ratio.  A simulator
+that charges crossings but not compute therefore cannot say anything about
+recovery: its coalescing deadlines never come due and its restore-overlap
+windows are fictional.
+
+This module prices one engine step's compute the same way the repo prices
+one crossing: a small analytic model over quantities the engine already has
+(the ``ModelConfig`` shapes), evaluated against a per-platform roofline
+(peak FLOPs + HBM bandwidth) with the CC parity factors the bridge law
+already encodes (``BridgeModel.compute_time`` / ``hbm_time`` — device-local
+work is at parity, L5).  Decode is weight-read memory-bound for every
+serving-scale config; prefill is FLOPs-bound for long prompts.  The charges
+land on the tape as ``kind="compute"`` records (see trace/tape.py), so
+replay attribution and the conformance checker see the full step anatomy,
+not just its crossings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .bridge import BridgeModel
+
+
+@dataclass(frozen=True)
+class ComputeSpec:
+    """Device roofline constants (FLOPs/s dense, bytes/s HBM)."""
+
+    peak_flops: float
+    hbm_bw: float
+
+
+#: per-bridge-profile rooflines.  TPU v5e matches launch/dryrun.PEAK_FLOPS;
+#: the GPU entries are the platforms' public dense-BF16 / HBM figures — the
+#: law-level claims (parity, hideability ordering) do not depend on their
+#: exact values, only on compute being charged at all.
+COMPUTE_SPECS = {
+    "b300-hgx": ComputeSpec(peak_flops=2.25e15, hbm_bw=8.0e12),
+    "rtx-pro-6000": ComputeSpec(peak_flops=2.5e14, hbm_bw=1.8e12),
+    "h200": ComputeSpec(peak_flops=9.9e14, hbm_bw=4.8e12),
+    "tpu-v5e": ComputeSpec(peak_flops=197e12, hbm_bw=819e9),
+}
+
+DEFAULT_SPEC = COMPUTE_SPECS["tpu-v5e"]
+
+
+def _dtype_bytes(dtype) -> int:
+    try:
+        return int(np.dtype(dtype).itemsize)
+    except TypeError:
+        return 2  # bf16-class default
+
+
+@dataclass(frozen=True)
+class ComputeCharge:
+    """One priced unit of device compute (what the gateway charges)."""
+
+    kind: str             # "prefill" | "decode"
+    flops: float
+    hbm_bytes: float
+    seconds: float
+    bound: str            # "compute" | "memory" — which roofline term won
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+
+class ComputeModel:
+    """Roofline pricing of engine steps against the active bridge profile.
+
+    Pure and deterministic, like ``BridgeModel``: the engine (or a
+    benchmark) asks for a step's seconds and charges them through
+    ``TransferGateway.charge_compute``.  The model and the executed network
+    are deliberately decoupled — benchmarks run the tiny smoke model for
+    token correctness while pricing compute against the paper's 27B serving
+    config, exactly as the crossing side prices B300 tolls on CPU.
+    """
+
+    def __init__(self, cfg: ModelConfig, bridge: BridgeModel, *,
+                 spec: Optional[ComputeSpec] = None):
+        self.cfg = cfg
+        self.bridge = bridge
+        self.spec = spec or COMPUTE_SPECS.get(bridge.profile.name, DEFAULT_SPEC)
+        self.active_params = float(cfg.active_param_count())
+        self.bytes_per_param = _dtype_bytes(cfg.dtype)
+
+    # -- per-token byte/flop terms ------------------------------------------------------
+
+    def kv_bytes_per_token(self) -> float:
+        """KV-cache bytes one cached token contributes per decode step."""
+        if self.cfg.is_attention_free:
+            # SSM state is O(1) in sequence length; fold it into weights
+            return 0.0
+        per_layer = 2 * self.cfg.n_kv_heads * self.cfg.head_dim * self.bytes_per_param
+        return float(per_layer * self.cfg.n_layers)
+
+    # -- decode -------------------------------------------------------------------------
+
+    def decode_charge(self, batch: int, *, kv_len: float = 0.0) -> ComputeCharge:
+        """One batched decode step: every active param touched once (weight
+        reads dominate), plus the KV read for each sequence's cached prefix.
+        """
+        batch = max(1, int(batch))
+        flops = 2.0 * self.active_params * batch
+        hbm = (self.active_params * self.bytes_per_param
+               + batch * max(0.0, kv_len) * self.kv_bytes_per_token())
+        return self._charge("decode", flops, hbm)
+
+    def decode_step_s(self, batch: int, *, kv_len: float = 0.0) -> float:
+        return self.decode_charge(batch, kv_len=kv_len).seconds
+
+    # -- prefill ------------------------------------------------------------------------
+
+    def prefill_charge(self, tokens: int) -> ComputeCharge:
+        """Prompt processing for ``tokens`` new tokens (restored/warm tokens
+        are the caller's to exclude — they skip the forward entirely)."""
+        tokens = max(0, int(tokens))
+        if tokens == 0:
+            return ComputeCharge("prefill", 0.0, 0.0, 0.0, "compute")
+        flops = 2.0 * self.active_params * tokens
+        hbm = (self.active_params * self.bytes_per_param
+               + tokens * self.kv_bytes_per_token())
+        return self._charge("prefill", flops, hbm)
+
+    def prefill_s(self, tokens: int) -> float:
+        return self.prefill_charge(tokens).seconds
+
+    # -- the roofline -------------------------------------------------------------------
+
+    def _charge(self, kind: str, flops: float, hbm_bytes: float) -> ComputeCharge:
+        ct = self.bridge.compute_time(flops, self.spec.peak_flops)
+        mt = self.bridge.hbm_time(hbm_bytes, self.spec.hbm_bw)
+        if ct >= mt:
+            return ComputeCharge(kind, flops, hbm_bytes, ct, "compute")
+        return ComputeCharge(kind, flops, hbm_bytes, mt, "memory")

@@ -45,6 +45,9 @@ class GatewayStats:
     d2h_bytes: int = 0
     batched_crossings_saved: int = 0
     bridge_time_s: float = 0.0
+    # ---- device-local compute (core.compute.ComputeModel charges) -------------
+    compute_charges: int = 0
+    compute_time_s: float = 0.0
 
 
 class TransferGateway:
@@ -117,11 +120,26 @@ class TransferGateway:
         return jax.device_put(arr, self.device)
 
     def d2h(self, device_array: jax.Array, *, op_class: str = "d2h") -> np.ndarray:
-        """One device-to-host crossing (the drain).  Blocking under CC (L2)."""
-        crossing = Crossing(_nbytes(device_array), Direction.D2H, StagingKind.REGISTERED)
+        """One device-to-host crossing (the drain).  Blocking under CC (L2).
+
+        Drain staging follows the same economics as uploads: with a
+        StagingArena attached the bounce buffer is a budgeted slab (first
+        touch of a size class pays the FRESH toll exactly once, then warm
+        hits), so D2H first-touch is priced like H2D instead of assuming a
+        pre-registered buffer the runtime never paid for.  Without an arena
+        the legacy model applies — the engine owns one persistent output
+        staging buffer, so drains stay REGISTERED.
+        """
+        nbytes = _nbytes(device_array)
+        if self.arena is not None:
+            staging, tag = self.arena.acquire(nbytes)
+            tags: tuple[str, ...] = (tag,)
+        else:
+            staging, tags = StagingKind.REGISTERED, ()
+        crossing = Crossing(nbytes, Direction.D2H, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags)
         return np.asarray(device_array)
 
     def batch_h2d(self, host_arrays: Sequence[np.ndarray], *,
@@ -171,17 +189,19 @@ class TransferGateway:
         self.stats.bridge_time_s += self.clock.now - before
         return out
 
-    def pooled_crossing(self, crossing: Crossing, *,
-                        op_class: str) -> tuple[int, float, float]:
+    def pooled_crossing(self, crossing: Crossing, *, op_class: str,
+                        tags: tuple = ()) -> tuple[int, float, float]:
         """Submit one crossing to the channel pool, recorded *uncharged*.
 
         Returns ``(ctx_id, start, done)``.  The caller owns the
         critical-path charge — the pipelined KV restore uses this to block
-        only for its pipeline fill while later chunks overlap engine work.
+        only for its pipeline fill while later chunks overlap engine work,
+        and the worker-composed coalescer flushes its D2H queue here so the
+        drain serializes on a worker channel instead of the engine clock.
         """
         ctx_id, start, done = self.pool.submit_ex(crossing)
         self._record(crossing, done - start, op_class, charge=False,
-                     channel=ctx_id, t_end=done)
+                     channel=ctx_id, t_end=done, tags=tags)
         return ctx_id, start, done
 
     def charge_crossing(self, nbytes: int, direction: Direction, *,
@@ -216,6 +236,35 @@ class TransferGateway:
         crossing = Crossing(int(nbytes), direction, staging)
         end = self.clock.advance(cost)
         self._record(crossing, cost, op_class, t_end=end, tags=tags)
+
+    # -- device-local compute ----------------------------------------------------------
+
+    def charge_compute(self, seconds: float, *, op_class: str,
+                       tags: tuple = ()) -> float:
+        """Charge device-local compute (prefill/decode forward) to the clock.
+
+        Compute is a first-class interval on the engine's virtual clock —
+        without it the coalescer's deadline trigger never comes due and every
+        overlap window is fictional.  The charge is NOT a crossing: nothing
+        moves over the bridge, so it lands on the tape as a ``kind="compute"``
+        record (direction/staging empty, channel -1 — the engine-serial path)
+        and is counted in ``stats.compute_time_s``, never ``bridge_time_s``.
+        Pricing belongs to the caller (core.compute.ComputeModel).
+        """
+        if seconds < 0:
+            raise ValueError(f"cannot charge negative compute {seconds}")
+        end = self.clock.advance(seconds)
+        self.stats.compute_charges += 1
+        self.stats.compute_time_s += seconds
+        rec = CopyRecord(
+            op_class, 0, seconds, self.bridge.cc_on,
+            direction="", staging="", channel=-1,
+            t_start=end - seconds, t_end=end, charged=True,
+            tags=tuple(tags), kind="compute")
+        self.records.append(rec)
+        for hook in self.on_record:
+            hook(rec)
+        return seconds
 
     # -- bookkeeping -------------------------------------------------------------------
 

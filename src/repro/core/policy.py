@@ -15,6 +15,7 @@ scheduling, offload, and streaming defaults accordingly").
 from __future__ import annotations
 
 import enum
+import os
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -44,6 +45,15 @@ class OffloadPolicy(enum.Enum):
     NO_OFFLOAD = "no_offload"
 
 
+def overlap_scheduler_default() -> bool:
+    """CI matrix hook: REPRO_OVERLAP_SCHEDULER=0 turns the overlap
+    *preference* off fleet-wide (tier-1 must pass either way — the barrier
+    semantics are not optional).  This is the single source of truth:
+    every RuntimeDefaults construction honors it unless a caller overrides
+    the field explicitly."""
+    return os.environ.get("REPRO_OVERLAP_SCHEDULER", "1") != "0"
+
+
 @dataclass(frozen=True)
 class RuntimeDefaults:
     """Policy defaults the runtime should select for a given CC mode."""
@@ -65,6 +75,16 @@ class RuntimeDefaults:
     #: chunk + double-buffer KV restores across the channel pool so restore
     #: overlaps subsequent decode steps (attacks the +131% restore penalty)
     pipelined_restore: bool = False
+    # ---- compute-charged clock + overlap scheduling (DESIGN.md §7) ------------
+    #: charge per-step prefill/decode compute to the virtual clock (the
+    #: ComputeModel roofline) — what makes coalescer deadlines come due and
+    #: restore-overlap windows real
+    charge_compute: bool = True
+    #: prefer scheduling decode compute into windows where pipelined-restore
+    #: channels are busy past clock.now (restored admissions defer while
+    #: other decode work fills the window).  The restore_barrier correctness
+    #: edge is ALWAYS enforced; this flag only controls the preference.
+    overlap_scheduler: bool = field(default_factory=overlap_scheduler_default)
 
 
 def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,

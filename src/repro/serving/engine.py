@@ -37,10 +37,12 @@ import numpy as np
 from repro.bridge_opt import CrossingCoalescer, StagingArena
 from repro.core.bridge import BridgeModel
 from repro.core.channels import VirtualClock
+from repro.core.compute import ComputeModel
 from repro.core.gateway import TransferGateway
 from repro.core.policy import RuntimeDefaults, SchedulingPolicy, cc_aware_defaults
 from repro.trace import opclasses as oc
 from repro.models.model import Model
+from .overlap import OverlapScheduler
 from .sampler import SamplingParams, sample
 
 
@@ -58,6 +60,11 @@ class Request:
     finish_t: Optional[float] = None
     decode_steps: int = 0
     restarts: int = 0                 # straggler/preemption requeues
+    #: prompt tokens whose prefill compute is already accounted elsewhere —
+    #: a restored warm prefix, or an admission layer (cluster Replica) that
+    #: prices prompt processing itself.  The engine charges compute only
+    #: for the cold tail.
+    warm_tokens: int = 0
 
 
 @dataclass
@@ -79,6 +86,7 @@ class ServingEngine:
                  cc_on: bool = False,
                  bridge: Optional[BridgeModel] = None,
                  defaults: Optional[RuntimeDefaults] = None,
+                 compute_model: Optional[ComputeModel] = None,
                  seed: int = 0):
         from repro.core.bridge import TPU_V5E
         self.model = model
@@ -98,10 +106,25 @@ class ServingEngine:
                 arena=arena)
         self.gateway = gateway
         #: bridge_opt: sub-threshold crossings queue here and flush fused —
-        #: replaces both the fresh-per-step async path and eager batching
-        self.coalescer = (CrossingCoalescer(self.gateway)
-                          if self.defaults.coalesce_small_crossings else None)
+        #: replaces both the fresh-per-step async path and eager batching.
+        #: Under WORKER_DRAIN the composition applies: the worker takes the
+        #: fused D2H flushes off the engine clock (ROADMAP item).
+        self.coalescer = (CrossingCoalescer(
+            self.gateway,
+            worker_flush=self.policy is SchedulingPolicy.WORKER_DRAIN)
+            if self.defaults.coalesce_small_crossings else None)
         self.clock: VirtualClock = self.gateway.clock
+        #: compute-charged clock (DESIGN.md §7): per-step prefill/decode
+        #: compute priced by the roofline and charged like any interval.
+        #: `compute_model` lets benchmarks price a paper-scale config while
+        #: executing the smoke model (the crossing side already does this).
+        self.compute = compute_model or (
+            ComputeModel(self.cfg, self.bridge)
+            if self.defaults.charge_compute else None)
+        #: restore-aware scheduling: barrier is law, preference is a flag
+        self.overlap = OverlapScheduler(
+            self.clock, self.gateway.pool,
+            prefer_overlap=self.defaults.overlap_scheduler)
 
         self.params = model.init(jax.random.PRNGKey(seed))
         self.caches = model.init_cache(max_batch, max_len)
@@ -118,10 +141,16 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, c, t, i: self.model.decode_step(p, c, t, i))
 
-        # with a coalescer every drain routes through it, so the worker
-        # thread would only idle (worker x coalescer composition: ROADMAP)
-        if self.policy is SchedulingPolicy.WORKER_DRAIN and self.coalescer is None:
-            self._start_worker()
+        # worker x coalescer composition: with a coalescer the drains queue
+        # and the worker's seat becomes a secure channel the fused flushes
+        # serialize on — prewarm the pool so the first flush never pays
+        # context creation on the serving path (§6.1 discipline).  Without
+        # a coalescer the worker is a real thread doing blocking drains.
+        if self.policy is SchedulingPolicy.WORKER_DRAIN:
+            if self.coalescer is None:
+                self._start_worker()
+            else:
+                self.gateway.pool.prewarm()
 
     # -- worker thread (v10c) --------------------------------------------------------
 
@@ -152,13 +181,56 @@ class ServingEngine:
         request.state = "queued"
         self.queue.append(request)
 
+    def mark_restore(self, request_id: str, done_t: float) -> None:
+        """Register that `request_id`'s KV restore lands at virtual `done_t`
+        (the offload layer's pipelined restore completion).  The engine will
+        barrier before the request's KV is first read, and — with the
+        overlap preference on — fill the drain window with other decode
+        work before admitting it."""
+        self.overlap.note_restore(request_id, done_t)
+
+    def restore_barrier(self, request_id: str) -> float:
+        """PipeLLM correctness edge: block until the restore pipeline for
+        `request_id` has drained.  No-op if nothing is pending or it already
+        landed.  Returns virtual seconds waited."""
+        return self.overlap.restore_barrier(request_id)
+
     def _admit(self) -> None:
-        while self.queue and self.free_slots:
-            req = self.queue.pop(0)
+        # Restore-aware admission: a request whose restore pipeline is still
+        # draining defers while other work can fill the window with decode
+        # compute (the §5.5 overlap, made real by the compute-charged
+        # clock).  Deferral is only ever a preference — if nothing else
+        # could make progress the request admits and the barrier waits.
+        # deferral granularity is one engine step: admitting later means one
+        # extra serialized step at the tail, so a window must be worth at
+        # least that much before deferring into it — priced with the live
+        # KV prefix, the same terms the step itself will charge
+        if self.compute is not None:
+            kv = (float(np.mean([r.index for r in self.active.values()]))
+                  if self.active else 0.0)
+            step_cost = self.compute.decode_step_s(
+                max(1, len(self.active)), kv_len=kv)
+        else:
+            step_cost = 0.0
+        i = 0
+        admitted = False
+        while self.free_slots and i < len(self.queue):
+            req = self.queue[i]
+            others = bool(self.active) or admitted or i + 1 < len(self.queue)
+            if others and self.overlap.should_defer(req.request_id,
+                                                    step_cost_s=step_cost):
+                self.overlap.record_deferral(req.request_id)
+                i += 1
+                continue
+            self.queue.pop(i)
             slot = self.free_slots.pop()
             self._prefill_into_slot(req, slot)
+            admitted = True
 
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        # first read of restored KV happens here: the barrier is the law
+        if self.overlap.restore_barrier(req.request_id) and self.coalescer is not None:
+            self.coalescer.poll()   # the barrier wait moved the clock
         prompt = np.asarray(req.prompt, np.int32)[None]     # (1, P)
         # prompt upload crosses the bridge (registered: steady-state serving
         # reuses the prompt staging buffer; coalesced when bridge_opt is on)
@@ -169,6 +241,15 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(prompt)}
         logits, pre_cache, idx0 = self.model.prefill(
             self.params, batch, max_len=self.max_len)
+        # prompt processing is device compute, charged like any interval;
+        # warm (restored / externally-priced) tokens skip the forward
+        if self.compute is not None:
+            cold = max(0, len(req.prompt) - req.warm_tokens)
+            if cold:
+                self.gateway.charge_compute(
+                    self.compute.prefill_s(cold), op_class=oc.PREFILL_COMPUTE)
+                if self.coalescer is not None:
+                    self.coalescer.poll()   # prefill compute moved the clock
         self._insert_slot_cache(pre_cache, slot)
         self.key, sk = jax.random.split(self.key)
         first = sample(logits, sk, req.sampling)
@@ -254,8 +335,25 @@ class ServingEngine:
         else:
             self.gateway.batch_h2d(small_inputs, op_class=oc.PREP_BATCHED_H2D)
 
+        # a decode step reads every active slot's KV: any restore still in
+        # flight for a stepping request must land first (PipeLLM barrier) —
+        # requests not reading restored KV never pay this
+        if self.overlap.pending:
+            waited = sum(self.overlap.restore_barrier(self.active[s].request_id)
+                         for s in slots)
+            if waited and self.coalescer is not None:
+                self.coalescer.poll()   # the barrier wait moved the clock
+
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(index))
+        # the forward+sample is a first-class clock charge: this is what
+        # ages coalescer queues toward their deadline and opens the window
+        # pipelined restores drain into
+        if self.compute is not None:
+            kv_len = float(np.mean([index[s] for s in slots]))
+            self.gateway.charge_compute(
+                self.compute.decode_step_s(len(slots), kv_len=kv_len),
+                op_class=oc.DECODE_COMPUTE)
         self.key, sk = jax.random.split(self.key)
         next_tokens = sample(logits, sk, self.active[slots[0]].sampling)
 
@@ -293,6 +391,10 @@ class ServingEngine:
             if (len(req.output_tokens) >= sp.max_new_tokens
                     or tok == sp.stop_token or req.index >= self.max_len - 1):
                 self._release(req)
+        if self.coalescer is not None:
+            # compute moved the clock this step: let aged queues meet their
+            # deadline now instead of waiting for the next submission
+            self.coalescer.poll()
         return len(slots)
 
     def run(self, max_steps: int = 10_000) -> dict:
@@ -314,8 +416,10 @@ class ServingEngine:
             "total_tokens": total_tokens,
             "virtual_time_s": self.clock.now,
             "bridge_time_s": self.gateway.stats.bridge_time_s,
+            "compute_time_s": self.gateway.stats.compute_time_s,
             "crossings": (self.gateway.stats.h2d_crossings
                           + self.gateway.stats.d2h_crossings),
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "steps": self.step_count,
+            "overlap": self.overlap.stats_dict(),
         }

@@ -72,6 +72,11 @@ class OffloadManager:
         self.host_store: dict[int, HostBlock] = {}
         self.seen_counts: dict[int, int] = {}
         self.stats = OffloadStats()
+        #: virtual time the most recent restore fully lands — equals
+        #: clock.now for blocking restores, the pipeline's completion for
+        #: pipelined ones.  Callers feed it to the engine's restore barrier
+        #: (ServingEngine.mark_restore) so first use blocks correctly.
+        self.last_restore_done_t: float = 0.0
 
     # -- observation (prefix traffic feeds the evidence) --------------------------------
 
@@ -141,6 +146,7 @@ class OffloadManager:
         self.stats.restore_hits += len(hits)
         self.stats.restore_misses += misses
         total = sum(b.payload_bytes for b in hits)
+        self.last_restore_done_t = self.gateway.clock.now
         if hits:
             payloads = [b.payload if b.payload is not None
                         else np.zeros(b.payload_bytes, np.uint8) for b in hits]
@@ -151,9 +157,11 @@ class OffloadManager:
                 self.stats.pipelined_restores += 1
                 self.stats.restore_fill_s += result.fill_s
                 self.stats.restore_overlap_s += result.overlap_s
+                self.last_restore_done_t = result.done_t
             else:
                 self.gateway.bulk_h2d_pooled(payloads,
                                              op_class=oc.KV_RESTORE_H2D)
+                self.last_restore_done_t = self.gateway.clock.now
             self.stats.restored_blocks += len(hits)
             self.stats.restored_bytes += total
         return len(hits), total

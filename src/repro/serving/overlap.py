@@ -1,0 +1,152 @@
+"""OverlapScheduler — restore-aware step scheduling + the PipeLLM barrier.
+
+Pipelined KV restore (bridge_opt/restore.py) leaves secure channels busy
+past ``clock.now``: the caller was charged only the pipeline fill, and the
+remaining chunks drain in the background.  Two things follow, one a
+preference and one a law:
+
+  * **Preference** — the engine should schedule decode *compute* into that
+    window (compute is the only charge that overlaps channel traffic — the
+    bridge law forbids overlapping crossings, L1/L2, but says nothing
+    against the forward pass running while a channel drains).  Concretely:
+    a request whose restore pipeline is still draining defers admission
+    while other decode work fills the window; by the time it admits, the
+    window has been spent on useful tokens instead of an idle barrier wait.
+  * **Law** — speculative restore needs a barrier before first use
+    (PipeLLM, ASPLOS 2025): an engine step that reads restored KV before
+    the pipeline drains MUST block until it lands.  ``restore_barrier``
+    advances the virtual clock to the pipeline's completion; a step that
+    does not read restored KV must never pay it.
+
+The preference is a flag (``prefer_overlap``, CI-swept via
+``REPRO_OVERLAP_SCHEDULER``); the barrier is unconditional.  With no
+restores in flight the scheduler is inert — admission order and every
+crossing are identical with the preference on or off, which is what keeps
+the golden tapes stable across the CI matrix.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.channels import SecureChannelPool, VirtualClock
+
+#: slack under which a pending restore counts as already landed
+EPS = 1e-12
+
+
+@dataclass
+class OverlapStats:
+    #: distinct admissions pushed back because their restore pipeline was
+    #: draining (one per request per restore, however many steps it spans)
+    deferred_admissions: int = 0
+    #: admission passes that deferred something (deferral churn per step)
+    deferral_steps: int = 0
+    #: barriers that actually blocked (clock advanced to pipeline end)
+    barrier_waits: int = 0
+    #: virtual seconds spent blocked at barriers
+    barrier_wait_s: float = 0.0
+    #: barriers that found the pipeline already drained (the overlap win)
+    barrier_noops: int = 0
+    restores_noted: int = 0
+
+
+class OverlapScheduler:
+    """Tracks in-flight restores and arbitrates admission around them."""
+
+    def __init__(self, clock: VirtualClock, pool: SecureChannelPool, *,
+                 prefer_overlap: bool = True):
+        self.clock = clock
+        self.pool = pool
+        self.prefer_overlap = prefer_overlap
+        #: request/slot key -> virtual time its restored KV fully lands
+        self.pending: Dict[str, float] = {}
+        #: keys already counted in stats.deferred_admissions for the
+        #: currently-pending restore (cleared when the restore resolves)
+        self._deferred_keys: set = set()
+        self.stats = OverlapStats()
+
+    # -- bookkeeping -------------------------------------------------------------------
+
+    def note_restore(self, key: str, done_t: float) -> None:
+        """Register that `key`'s KV restore completes at virtual `done_t`.
+
+        Blocking (non-pipelined) restores pass ``done_t <= clock.now`` and
+        make the later barrier a no-op — the same call site covers both.
+        """
+        self.pending[key] = max(float(done_t), self.pending.get(key, 0.0))
+        self.stats.restores_noted += 1
+
+    def outstanding(self) -> int:
+        return len(self.pending)
+
+    # -- the preference ----------------------------------------------------------------
+
+    def window_s(self) -> float:
+        """Seconds the secure channels stay busy past now (the window decode
+        compute can be scheduled into)."""
+        ctxs = self.pool.active_contexts()
+        if not ctxs:
+            return 0.0
+        return max(0.0, max(c.busy_until for c in ctxs) - self.clock.now)
+
+    def should_defer(self, key: str, *, step_cost_s: float = 0.0) -> bool:
+        """Defer `key`'s admission while its restore pipeline drains?
+
+        Only a preference: the engine still admits when nothing else could
+        make progress (the caller checks that), and never defers once the
+        pipeline has landed.  `step_cost_s` is the price of deferral —
+        admission is re-decided once per engine step, so deferring a
+        request that would have batched with this step's decode costs one
+        step of serialization at the tail.  Defer only when the barrier
+        wait it avoids exceeds that (a window shorter than a step is
+        cheaper to pay as a wait than to chase).
+        """
+        if not self.prefer_overlap:
+            return False
+        done_t = self.pending.get(key)
+        return (done_t is not None
+                and done_t - self.clock.now > step_cost_s + EPS)
+
+    def record_deferral(self, key: str) -> None:
+        """Count a deferral the engine just took for `key`: once per
+        request per restore in `deferred_admissions`, every admission pass
+        in `deferral_steps`."""
+        self.stats.deferral_steps += 1
+        if key not in self._deferred_keys:
+            self._deferred_keys.add(key)
+            self.stats.deferred_admissions += 1
+
+    # -- the law -----------------------------------------------------------------------
+
+    def restore_barrier(self, key: str) -> float:
+        """Block until `key`'s restored KV has fully landed (first-use
+        barrier).  Returns the virtual seconds waited (0.0 when the pipeline
+        already drained or nothing was pending for `key`)."""
+        done_t = self.pending.pop(key, None)
+        self._deferred_keys.discard(key)   # a later re-restore counts anew
+        if done_t is None:
+            return 0.0
+        waited = done_t - self.clock.now
+        if waited > EPS:
+            self.clock.advance_to(done_t)
+            self.stats.barrier_waits += 1
+            self.stats.barrier_wait_s += waited
+            return waited
+        self.stats.barrier_noops += 1
+        return 0.0
+
+    # -- export ------------------------------------------------------------------------
+
+    def stats_dict(self) -> dict:
+        return {
+            "deferred_admissions": self.stats.deferred_admissions,
+            "deferral_steps": self.stats.deferral_steps,
+            "barrier_waits": self.stats.barrier_waits,
+            "barrier_wait_s": self.stats.barrier_wait_s,
+            "barrier_noops": self.stats.barrier_noops,
+            "restores_noted": self.stats.restores_noted,
+            "outstanding": self.outstanding(),
+            "prefer_overlap": self.prefer_overlap,
+        }

@@ -7,16 +7,23 @@ regressions on the crossing stream itself: a policy change that breaks the
 law fails here before any throughput number moves.
 
   L1  Within a secure channel, crossings serialize: intervals on the same
-      channel never overlap.
-  L2  Asynchrony is revoked: under CC, charged crossings block the calling
-      thread, so no two charged crossings overlap anywhere on the tape
+      channel never overlap.  Compute records (kind="compute", DESIGN.md §7)
+      occupy the engine-serial path (channel -1) like any other interval —
+      a compute interval overlapping a crossing interval on the same
+      channel means the engine claimed to run the forward *while* blocked
+      in a same-thread crossing, which the bridge law forbids (L2 revokes
+      exactly that asynchrony).  Cross-channel overlap is legal — it is the
+      whole point of the restore-overlap scheduler.
+  L2  Asynchrony is revoked: under CC, charged intervals block the calling
+      thread, so no two charged intervals overlap anywhere on the tape
       (and every interval is well-formed).
   L3  Every crossing pays its staging toll: durations are floored by the
-      profile's fresh/registered toll for the tape's CC mode.
+      profile's fresh/registered toll for the tape's CC mode.  Compute
+      records are exempt — they have no staging path.
   L4  Bandwidth lives in bounded contexts: the tape uses at most
       ``max_secure_contexts`` distinct channels, and re-pricing the same
       stream CC-off never costs more than the recorded CC-on stream
-      (CC time >= native time).
+      (CC time >= native time; compute re-prices at parity).
 """
 
 from __future__ import annotations
@@ -113,6 +120,28 @@ def check_tape(tape: BridgeTape) -> ConformanceReport:
                     "L1", i1, f"overlaps record {i0} on channel {channel}: "
                               f"[{s0:.6g}, {e0:.6g}] vs [{s1:.6g}, {e1:.6g}]"))
 
+    # -- L1 (compute edge): compute never overlaps a crossing on its channel ------------
+    # Implied by the sweep above when both kinds share a channel, but checked
+    # explicitly so a tape where compute and crossings interleave incorrectly
+    # names the offending *pair* of kinds (the overlap-scheduler regression
+    # surface: decode compute may overlap a crossing only across channels).
+    for channel, spans in by_channel.items():
+        kinds = {i: records[i].is_compute for i, _, _ in spans}
+        if not any(kinds.values()) or all(kinds.values()):
+            continue
+        ordered = sorted(spans, key=lambda s: (s[1], s[2]))
+        open_end, open_i = -float("inf"), -1
+        for i, s, e in ordered:
+            report.checks["L1_compute"] = report.checks.get("L1_compute", 0) + 1
+            if (open_i >= 0 and s < open_end - EPS
+                    and kinds[i] != kinds[open_i]):
+                report.violations.append(Violation(
+                    "L1", i, f"compute/crossing overlap with record {open_i} "
+                             f"on channel {channel}: device work cannot run "
+                             f"while its thread is blocked in a crossing"))
+            if e > open_end:
+                open_end, open_i = e, i
+
     # -- L2: revoked asynchrony (charged crossings block the caller) --------------------
     if tape.meta.cc_on:
         charged = sorted(((i, r.t_start, r.t_end)
@@ -127,6 +156,8 @@ def check_tape(tape: BridgeTape) -> ConformanceReport:
 
     # -- L3: staging tolls present ------------------------------------------------------
     for i, r in enumerate(records):
+        if r.is_compute:
+            continue  # no staging path, no toll floor
         report.checks["L3"] = report.checks.get("L3", 0) + 1
         floor = _toll_floor(profile, r.staging, tape.meta.cc_on)
         if r.duration_s < floor - EPS:

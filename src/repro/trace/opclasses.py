@@ -40,6 +40,17 @@ COALESCED_D2H = "coalesced_d2h"
 #: chunked, double-buffered KV restore over the channel pool (§6.2 recovery)
 KV_RESTORE_PIPELINED = "kv_restore_pipelined"
 
+# -- device-local compute (kind="compute" records; DESIGN.md §7) ----------------------
+# Compute semantics hang off the record's `kind` field, not these strings:
+# replay pass-through, the L3 exemption and the L1 compute/crossing edge all
+# key on kind == "compute", so a new compute op class needs only to be
+# emitted via `TransferGateway.charge_compute` (which stamps the kind).
+#: one batched decode step's forward+sample compute (ComputeModel roofline)
+DECODE_COMPUTE = "decode_compute"
+#: prompt-processing compute at admission (cold tokens only — restored/warm
+#: prefix tokens skip the forward and therefore the charge)
+PREFILL_COMPUTE = "prefill_compute"
+
 #: record *tags* (additive tape metadata, not op classes): how the staging
 #: arena resolved a crossing's staging buffer
 ARENA_HIT = "arena_hit"

@@ -68,6 +68,9 @@ class RewrittenCrossing:
     staging: str
     recorded_s: float
     source_calls: int = 1
+    #: "crossing" or "compute" — compute intervals pass through every policy
+    #: rewrite untouched and re-price at parity, never as bridge traffic
+    kind: str = "crossing"
 
 
 def rewrite_for_policy(records: Sequence[TapeRecord],
@@ -95,6 +98,15 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
         batch.clear()
 
     for r in records:
+        if r.is_compute:
+            # compute is not bridge traffic: no policy moves it, but it does
+            # break a run of prep uploads (the engine charged the forward
+            # between one step's preps and the next's)
+            flush()
+            out.append(RewrittenCrossing(r.op_class, r.direction, r.nbytes,
+                                         r.staging, r.duration_s,
+                                         kind=r.kind))
+            continue
         if policy in (SchedulingPolicy.SYNC_DRAIN.value,
                       SchedulingPolicy.WORKER_DRAIN.value):
             if r.op_class in oc.PREP_CLASSES and r.direction == Direction.H2D.value:
@@ -202,8 +214,19 @@ class TraceReplayer:
         else:
             policy = policy or self.tape.meta.policy
             stream = [RewrittenCrossing(r.op_class, r.direction, r.nbytes,
-                                        r.staging, r.duration_s)
+                                        r.staging, r.duration_s, kind=r.kind)
                       for r in self.tape.records]
+
+        # compute re-prices at parity (L5: device-local work is ~unaffected
+        # by CC): recorded = t_ideal / parity_rec, counterfactual =
+        # t_ideal / parity_new.  Replay holds the accelerator itself fixed —
+        # a cross-profile replay re-prices crossings, not the silicon.
+        rec_profile = PROFILES.get(self.tape.meta.profile)
+        parity_rec = (rec_profile.compute_parity
+                      if rec_profile is not None and self.tape.meta.cc_on
+                      else 1.0)
+        parity_new = model.profile.compute_parity if model.cc_on else 1.0
+        compute_scale = parity_rec / parity_new
 
         per_class: dict[str, list[tuple[int, float, float]]] = {}
         wall = 0.0
@@ -212,9 +235,12 @@ class TraceReplayer:
         total_recorded = 0.0
         worker_mode = policy == SchedulingPolicy.WORKER_DRAIN.value
         for rc in stream:
-            crossing = Crossing(rc.nbytes, Direction(rc.direction),
-                                StagingKind(rc.staging))
-            cost = model.crossing_time(crossing, n_contexts=pool)
+            if rc.kind == "compute":
+                cost = rc.recorded_s * compute_scale
+            else:
+                crossing = Crossing(rc.nbytes, Direction(rc.direction),
+                                    StagingKind(rc.staging))
+                cost = model.crossing_time(crossing, n_contexts=pool)
             total_replayed += cost
             total_recorded += rc.recorded_s
             per_class.setdefault(rc.op_class, []).append(

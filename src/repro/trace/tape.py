@@ -14,7 +14,15 @@ asserts the bridge-law invariants over any tape (conformance.py).
 Format versioning (see DESIGN.md §5): ``format`` is ``bridge-tape/v<N>``.
 Additive, default-carrying fields do not bump N; any change that alters the
 meaning of an existing field or removes one does, and ``from_dict`` refuses
-tapes from a different major version rather than misreading them.
+tapes from an unreadable major version rather than misreading them.
+
+v2 (DESIGN.md §7): records carry an additive ``kind`` field — ``crossing``
+(the only v1 meaning) or ``compute`` (a device-local prefill/decode
+interval charged by core.compute.ComputeModel; direction/staging empty,
+nbytes 0).  v1 tapes parse unchanged (every record defaults to
+``crossing``), so this reader accepts v1 *and* v2; the writer stamps v2
+because a stream containing compute records must not be consumed by a
+v1-only reader that would misprice them as crossings.
 """
 
 from __future__ import annotations
@@ -25,7 +33,13 @@ from typing import Iterable, Optional
 
 from repro.core.accounting import CopyRecord
 
-TAPE_FORMAT = "bridge-tape/v1"
+TAPE_FORMAT = "bridge-tape/v2"
+#: major versions this reader speaks (v1 = crossings only; v2 adds compute)
+READABLE_VERSIONS = (1, 2)
+
+#: record kinds
+KIND_CROSSING = "crossing"
+KIND_COMPUTE = "compute"
 
 
 class TapeFormatError(ValueError):
@@ -37,9 +51,9 @@ class TapeRecord:
     """One crossing on the tape (the serializable form of a CopyRecord)."""
 
     op_class: str
-    direction: str          # "h2d" | "d2h"
+    direction: str          # "h2d" | "d2h" ("" for compute records)
     nbytes: int
-    staging: str            # "fresh" | "registered"
+    staging: str            # "fresh" | "registered" ("" for compute records)
     channel: int            # secure-channel/context id; -1 = engine-serial path
     t_start: float
     t_end: float
@@ -47,17 +61,24 @@ class TapeRecord:
     #: additive provenance tags (bridge_opt: arena_hit/arena_miss); default
     #: empty, so pre-tag tapes parse unchanged (no version bump)
     tags: tuple = ()
+    #: interval kind: "crossing" (v1's only meaning) or "compute"
+    #: (device-local prefill/decode work — DESIGN.md §7)
+    kind: str = KIND_CROSSING
 
     @property
     def duration_s(self) -> float:
         return self.t_end - self.t_start
+
+    @property
+    def is_compute(self) -> bool:
+        return self.kind == KIND_COMPUTE
 
     @classmethod
     def from_copy_record(cls, rec: CopyRecord) -> "TapeRecord":
         return cls(op_class=rec.op_class, direction=rec.direction,
                    nbytes=rec.nbytes, staging=rec.staging, channel=rec.channel,
                    t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged,
-                   tags=tuple(rec.tags))
+                   tags=tuple(rec.tags), kind=rec.kind)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -68,7 +89,8 @@ class TapeRecord:
                    nbytes=int(d["nbytes"]), staging=d["staging"],
                    channel=int(d["channel"]), t_start=float(d["t_start"]),
                    t_end=float(d["t_end"]), charged=bool(d.get("charged", True)),
-                   tags=tuple(d.get("tags", ())))
+                   tags=tuple(d.get("tags", ())),
+                   kind=d.get("kind", KIND_CROSSING))
 
 
 @dataclass(frozen=True)
@@ -101,15 +123,27 @@ class BridgeTape:
 
     # -- summary views (what golden tests pin) ---------------------------------------
 
-    def n_crossings(self) -> int:
+    def n_records(self) -> int:
         return len(self.records)
+
+    def n_crossings(self) -> int:
+        """Crossing records only — compute intervals are not crossings."""
+        return sum(1 for r in self.records if not r.is_compute)
 
     def total_bytes(self) -> int:
         return sum(r.nbytes for r in self.records)
 
     def total_recorded_s(self) -> float:
-        """Sum of per-crossing durations (serialized bridge time)."""
+        """Sum of all recorded interval durations (crossings + compute)."""
         return sum(r.duration_s for r in self.records)
+
+    def compute_seconds(self) -> float:
+        """Recorded device-local compute time (kind="compute" records)."""
+        return sum(r.duration_s for r in self.records if r.is_compute)
+
+    def crossing_seconds(self) -> float:
+        """Recorded serialized-bridge time (crossing records only)."""
+        return sum(r.duration_s for r in self.records if not r.is_compute)
 
     def charged_s(self) -> float:
         """Durations charged to the recording clock's critical path."""
@@ -128,16 +162,21 @@ class BridgeTape:
         return out
 
     def staging_seconds(self) -> dict[str, float]:
-        """Recorded seconds per staging kind ("fresh"/"registered")."""
+        """Recorded crossing seconds per staging kind ("fresh"/"registered");
+        compute records have no staging path and are excluded."""
         out: dict[str, float] = {}
         for r in self.records:
+            if r.is_compute:
+                continue
             out[r.staging] = out.get(r.staging, 0.0) + r.duration_s
         return out
 
     def fresh_share(self) -> float:
-        """Fraction of recorded seconds spent in fresh-staged crossings —
-        the §5.2 headline class's share of this tape (bridge_opt's target)."""
-        total = self.total_recorded_s()
+        """Fraction of recorded *crossing* seconds spent in fresh-staged
+        crossings — the §5.2 headline class's share of this tape
+        (bridge_opt's target; compute time is not part of the denominator,
+        so charging compute cannot dilute a staging regression)."""
+        total = self.crossing_seconds()
         if total <= 0:
             return 0.0
         return self.staging_seconds().get("fresh", 0.0) / total
@@ -173,7 +212,7 @@ class BridgeTape:
         prefix, _, version = fmt.rpartition("/v")
         if prefix != "bridge-tape" or not version.isdigit():
             raise TapeFormatError(f"not a bridge tape: format={fmt!r}")
-        if int(version) != 1:
+        if int(version) not in READABLE_VERSIONS:
             raise TapeFormatError(
                 f"unsupported tape version {fmt!r} (this reader speaks "
                 f"{TAPE_FORMAT}); regenerate the tape — see DESIGN.md §5")

@@ -12,7 +12,7 @@ mix and totals are the regression surface).  See DESIGN.md §5.
 ``--check`` re-records the golden workload and compares it against the
 checked-in tapes without writing anything: crossing count, op-class mix,
 byte totals, per-record (op class, direction, bytes, staging, channel,
-tags) sequence, and virtual-clock totals to 1e-9 relative.  A non-zero
+tags, kind) sequence, and virtual-clock totals to 1e-9 relative.  A non-zero
 exit means the tapes are stale — e.g. a new op class or record field
 landed without a regen — so CI fails before a golden test silently loses
 its regression surface.
@@ -33,7 +33,7 @@ REL_TOL = 1e-9
 
 def _record_signature(r) -> tuple:
     return (r.op_class, r.direction, r.nbytes, r.staging, r.channel,
-            tuple(r.tags), r.charged)
+            tuple(r.tags), r.charged, r.kind)
 
 
 def _compare(fresh: BridgeTape, golden: BridgeTape, filename: str) -> list[str]:

@@ -191,3 +191,114 @@ class TestCoalescerProperties:
             co.barrier()
         report = check_tape(rec.tape())
         assert report.ok, report.format()
+
+
+# ---------------------------------------------------------------------------------
+# Compute-charged coalescer (ISSUE 4): the deadline law under any
+# interleaving of compute charges, conservation, and tape order
+# ---------------------------------------------------------------------------------
+
+#: operations interleaving sub-threshold submissions with compute charges
+#: (sizes in bytes, compute in microseconds of virtual time)
+compute_charged_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("h2d"), st.integers(min_value=1, max_value=600)),
+        st.tuples(st.just("d2h"), st.integers(min_value=1, max_value=600)),
+        st.tuples(st.just("compute"), st.integers(min_value=1, max_value=2000)),
+        st.tuples(st.just("poll"), st.just(0)),
+        st.tuples(st.just("big"), st.integers(min_value=2000, max_value=9000)),
+    ),
+    min_size=1, max_size=60)
+
+DEADLINE_S = 200e-6
+
+
+def _drive_with_compute(gw, co, op, size):
+    """The engine contract: any external clock charge is followed by poll()."""
+    if op == "h2d":
+        co.h2d(np.zeros(size, np.uint8), op_class="p")
+    elif op == "d2h":
+        co.d2h(np.zeros(size, np.uint8), op_class="d")
+    elif op == "compute":
+        gw.charge_compute(size * 1e-6, op_class=oc.DECODE_COMPUTE)
+        co.poll()
+    elif op == "big":
+        co.h2d(np.zeros(size, np.uint8), op_class="big")
+    else:
+        co.poll()
+
+
+class TestComputeChargedCoalescer:
+    @settings(max_examples=40, deadline=None)
+    @given(ops=compute_charged_ops)
+    def test_deadline_fires_within_deadline_of_enqueue(self, ops):
+        """After every operation, no queued crossing has outlived the
+        deadline on the virtual clock — compute charges age queues, and the
+        poll-after-charge contract (plus the flush cross-check) guarantees
+        the trigger fires at the first opportunity past the deadline."""
+        gw = _gateway()
+        co = CrossingCoalescer(gw, threshold_bytes=1024, watermark_bytes=1500,
+                               max_queued=8, deadline_s=DEADLINE_S)
+        for op, size in ops:
+            _drive_with_compute(gw, co, op, size)
+            now = gw.clock.now
+            for d in (Direction.H2D, Direction.D2H):
+                q = co._q[d]
+                if q:
+                    assert now - q[0].enqueued_t < DEADLINE_S + 1e-12
+        # and the trigger is live, not vacuously satisfied by empty queues:
+        # from any reached state, enqueue + one over-deadline compute charge
+        # must fire a deadline flush at the poll
+        before = co.stats.deadline_flushes
+        co.d2h(np.zeros(8, np.uint8), op_class="tail")
+        pending_tail = co.pending(Direction.D2H) > 0
+        gw.charge_compute(2 * DEADLINE_S, op_class=oc.DECODE_COMPUTE)
+        co.poll()
+        if pending_tail:
+            assert co.stats.deadline_flushes > before
+        assert co.pending(Direction.D2H) == 0
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops=compute_charged_ops)
+    def test_bytes_conserved_under_compute_interleaving(self, ops):
+        """Compute charges never create, drop, or resize queued crossings:
+        queued == fused + pending at every point, exactly as without them."""
+        gw = _gateway()
+        co = CrossingCoalescer(gw, threshold_bytes=1024, watermark_bytes=1500,
+                               max_queued=8, deadline_s=DEADLINE_S)
+        for op, size in ops:
+            _drive_with_compute(gw, co, op, size)
+            s = co.stats
+            assert s.fused_crossings + co.pending() == s.queued
+            assert (s.fused_bytes
+                    + co.pending_bytes(Direction.H2D)
+                    + co.pending_bytes(Direction.D2H)) == s.queued_bytes
+        co.barrier()
+        s = co.stats
+        assert s.fused_bytes == s.queued_bytes
+        fused_rec_bytes = sum(r.nbytes for r in gw.records
+                              if r.op_class in (oc.COALESCED_H2D,
+                                                oc.COALESCED_D2H))
+        assert fused_rec_bytes == s.queued_bytes
+        # compute records carry no bytes: they cannot leak into conservation
+        assert all(r.nbytes == 0 for r in gw.records if r.kind == "compute")
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=compute_charged_ops)
+    def test_no_flush_reorders_records_on_the_tape(self, ops):
+        """Flushes (whatever their trigger) append to the tape in virtual-
+        clock order: record start times are non-decreasing and the stream
+        conforms to L1-L4 with compute records present."""
+        from repro.trace import TraceRecorder, check_tape
+        gw = _gateway(arena=StagingArena(1 << 20))
+        co = CrossingCoalescer(gw, threshold_bytes=1024, watermark_bytes=1500,
+                               max_queued=8, deadline_s=DEADLINE_S)
+        with TraceRecorder(gw, label="compute-charged") as rec:
+            for op, size in ops:
+                _drive_with_compute(gw, co, op, size)
+            co.barrier()
+        tape = rec.tape()
+        starts = [r.t_start for r in tape.records]
+        assert all(a <= b + 1e-12 for a, b in zip(starts, starts[1:]))
+        report = check_tape(tape)
+        assert report.ok, report.format()

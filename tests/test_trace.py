@@ -76,12 +76,29 @@ class TestTapeFormat:
     def test_unknown_version_is_refused(self):
         tape = BridgeTape(meta=TapeMeta(profile="tpu-v5e", cc_on=True))
         blob = tape.to_dict()
-        blob["format"] = "bridge-tape/v2"
+        blob["format"] = "bridge-tape/v3"
         with pytest.raises(TapeFormatError, match="regenerate"):
             BridgeTape.from_dict(blob)
         blob["format"] = "not-a-tape"
         with pytest.raises(TapeFormatError):
             BridgeTape.from_dict(blob)
+
+    def test_v1_tapes_still_parse_as_all_crossings(self):
+        """The v2 `kind` field is additive: a v1 tape (no kind anywhere)
+        reads back with every record a crossing and zero compute time."""
+        tape = BridgeTape(meta=TapeMeta(profile="tpu-v5e", cc_on=True),
+                          records=[TapeRecord(
+                              op_class="drain_d2h", direction="d2h",
+                              nbytes=64, staging="registered", channel=-1,
+                              t_start=0.0, t_end=1e-4)])
+        blob = tape.to_dict()
+        blob["format"] = "bridge-tape/v1"
+        for rec in blob["records"]:
+            del rec["kind"]
+        again = BridgeTape.from_dict(blob)
+        assert again.n_crossings() == 1
+        assert again.compute_seconds() == 0.0
+        assert not again.records[0].is_compute
 
 
 class TestReplay:
