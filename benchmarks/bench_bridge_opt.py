@@ -31,6 +31,15 @@ the coalescer's latency bound is now driven by compute charges.
 
 Part 3: the restore-overlap guardrail — the same workload with a pipelined
 restore in flight, overlap preference on vs off; on must never lose.
+
+Part 4 (ISSUE 5): the restore-under-decode sweep for slot-masked decode.
+Four slots decode while one slot's pipelined restore drains mid-run; with
+`slot_masked_decode` off the whole batch barriers on that one slot's
+pipeline (the stall this PR removes), with it on the ready slots keep
+stepping and the restoring slot rejoins when its pipeline lands.  Masked
+throughput must be STRICTLY above the whole-batch-barrier baseline while
+the pipeline drains, with identical output tokens — and a no-restore
+workload must be unaffected by the flag (the golden tapes pin that side).
 """
 
 from __future__ import annotations
@@ -300,6 +309,92 @@ def overlap_guardrail_rows(model) -> list[str]:
     ]
 
 
+# ---------------------------------------------------------------------------------
+# Part 4: restore-under-decode sweep (slot-masked decode, ISSUE 5)
+# ---------------------------------------------------------------------------------
+
+#: the restoring slot's short tail vs the batch's long one: masking can hide
+#: the whole drain window inside the others' runway, the barrier cannot
+MASKED_SWEEP_SHORT_TOKENS = 4
+MASKED_SWEEP_LONG_TOKENS = 16
+MASKED_SWEEP_BLOCKS = 96
+MASKED_SWEEP_BLOCK_BYTES = 128 << 10
+MASKED_SWEEP_CHUNK_BYTES = 8 << 10
+
+
+def slot_masked_rows(model) -> list[str]:
+    def run_once(masked: bool) -> dict:
+        bridge = BridgeModel(B300, cc_on=True)
+        defaults = dataclasses.replace(
+            _defaults(ARENA_BYTES, True, True), scheduling=SP.SYNC_DRAIN,
+            slot_masked_decode=masked)
+        engine = ServingEngine(
+            model, max_batch=4, max_len=64, policy=SP.SYNC_DRAIN,
+            bridge=bridge, defaults=defaults,
+            compute_model=ComputeModel(get_config(PAPER_MODEL), bridge),
+            seed=0)
+        gw = engine.gateway
+        gw.pool.prewarm()
+        engine.submit(Request(
+            "r0", prompt=list(PROMPT),
+            sampling=SamplingParams(max_new_tokens=MASKED_SWEEP_SHORT_TOKENS)))
+        for i in range(1, 4):
+            engine.submit(Request(
+                f"r{i}", prompt=list(PROMPT),
+                sampling=SamplingParams(
+                    max_new_tokens=MASKED_SWEEP_LONG_TOKENS)))
+        engine.step()      # all four slots running
+        # r0's restore pipeline starts draining mid-decode (the late-restore
+        # shape: re-restore after migration/preemption), notified through
+        # the offload layer's per-request completion callback
+        mgr = OffloadManager(gw, OffloadPolicy.REUSE_AWARE,
+                             pipelined_restore=True,
+                             restore_chunk_bytes=MASKED_SWEEP_CHUNK_BYTES)
+        for b in range(MASKED_SWEEP_BLOCKS):
+            mgr.host_store[b] = HostBlock(b, MASKED_SWEEP_BLOCK_BYTES, 2, None)
+        mgr.on_restore_done.append(engine.mark_restore)
+        recorder = TraceRecorder(gw, policy=SP.SYNC_DRAIN.value,
+                                 label=f"slot-masked-{masked}").attach()
+        try:
+            mgr.restore(list(range(MASKED_SWEEP_BLOCKS)), key="r0")
+            stats = engine.run()
+        finally:
+            recorder.detach()
+            engine.close()
+        return {
+            "stats": stats,
+            "tps": stats["total_tokens"] / max(stats["virtual_time_s"], 1e-12),
+            "tokens": {r.request_id: list(r.output_tokens)
+                       for r in engine.finished},
+            "summary": recorder.summary(),
+            "conformance_ok": check_tape(recorder.tape()).ok,
+        }
+
+    on, off = run_once(True), run_once(False)
+    ov_on, ov_off = on["stats"]["overlap"], off["stats"]["overlap"]
+    masked_steps = on["summary"]["masked_steps"]
+    return [
+        f"bridge_opt/slot_masked_decode_tps,{on['tps']:.4f},"
+        f"ready slots keep stepping while r0's pipeline drains "
+        f"(deferred_slots={ov_on['deferred_slots']}, "
+        f"masked_steps={masked_steps}, "
+        f"barrier_wait={ov_on['barrier_wait_s']:.6f}s)",
+        f"bridge_opt/whole_batch_barrier_tps,{off['tps']:.4f},"
+        f"flag off: one restoring slot re-serializes the batch "
+        f"(barrier_wait={ov_off['barrier_wait_s']:.6f}s)",
+        f"bridge_opt/slot_masked_beats_barrier,"
+        f"{float(on['tps'] > off['tps']):.1f},"
+        f"masked {on['tps']:.1f} tok/s must be STRICTLY above barrier "
+        f"{off['tps']:.1f} tok/s while the restore pipeline drains",
+        f"bridge_opt/slot_masked_tokens_identical,"
+        f"{float(on['tokens'] == off['tokens']):.1f},"
+        f"masking changes timing, never tokens (greedy rejoin)",
+        f"bridge_opt/slot_masked_conformance_pass,"
+        f"{float(on['conformance_ok'] and off['conformance_ok']):.1f},"
+        f"L1-L4 + compute/crossing edge over both sweep tapes",
+    ]
+
+
 def run() -> list[str]:
     model = smoke_model()
     results = {name: run_variant(model, name) for name in VARIANTS}
@@ -380,6 +475,7 @@ def run() -> list[str]:
         f"L1-L4 over all {len(results)} rung tapes")
     lines.extend(scheduling_ladder_rows(model))
     lines.extend(overlap_guardrail_rows(model))
+    lines.extend(slot_masked_rows(model))
     return lines
 
 

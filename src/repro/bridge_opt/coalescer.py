@@ -76,6 +76,10 @@ class CoalescerStats:
     worker_flushes: int = 0
     #: engine-clock seconds charged for worker flush handoffs
     worker_handoff_s: float = 0.0
+    #: poll() calls by source ("clock" = ordinary after-charge polls;
+    #: "deferral" = slot-masked decode polling after a step deferred slots,
+    #: so a deferred slot's queued flushes keep aging — DESIGN.md §8)
+    polls: dict = field(default_factory=dict)
 
     @property
     def n_flushes(self) -> int:
@@ -188,16 +192,20 @@ class CrossingCoalescer:
         elif len(q) >= self.max_queued:
             self.flush(direction, trigger="queue_cap")
 
-    def poll(self) -> float:
+    def poll(self, *, source: str = "clock") -> float:
         """Fire the deadline trigger against the current virtual clock.
 
         Submissions check the deadline themselves; any call site that moves
         the clock *without* submitting — above all the engine's per-step
         compute charge — polls afterwards so queued crossings flush within
         `deadline_s` of enqueue under any interleaving of charges (the
-        property the hypothesis suite pins).  Returns the bridge time
+        property the hypothesis suite pins).  `source` labels why the caller
+        polled (slot-masked decode polls with "deferral" when a step masks
+        slots out, so a deferred slot's queued flushes still age instead of
+        waiting for that slot to submit again).  Returns the bridge time
         charged to the engine clock.
         """
+        self.stats.polls[source] = self.stats.polls.get(source, 0) + 1
         charged = 0.0
         now = self.gateway.clock.now
         for d, q in self._q.items():

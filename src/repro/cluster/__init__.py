@@ -8,14 +8,16 @@ that reads the virtual clock instead of wall time.
 """
 
 from .autoscaler import Autoscaler, AutoscalerConfig, ScaleDecision
-from .budget import BudgetExhausted, ContextLease, SecureContextBudget
+from .budget import (BudgetExhausted, ContextLease, PinnedBudget, PinnedLease,
+                     SecureContextBudget)
 from .replica import Replica, ReplicaConfig, ReplicaMetrics, prompt_prefix_hashes
 from .router import ClusterRouter, RoutingPolicy, build_cluster
 from .tenant_manager import AttestationError, TenantManager
 
 __all__ = [
     "Autoscaler", "AutoscalerConfig", "ScaleDecision",
-    "BudgetExhausted", "ContextLease", "SecureContextBudget",
+    "BudgetExhausted", "ContextLease", "PinnedBudget", "PinnedLease",
+    "SecureContextBudget",
     "Replica", "ReplicaConfig", "ReplicaMetrics", "prompt_prefix_hashes",
     "ClusterRouter", "RoutingPolicy", "build_cluster",
     "AttestationError", "TenantManager",

@@ -1,4 +1,5 @@
-"""Cluster-wide secure-context budget (paper §4 L4 at fleet scale).
+"""Cluster-wide secure-context and pinned-memory budgets (paper §4 L4 at
+fleet scale).
 
 Under GPU-CC, bridge bandwidth is bought with secure copy contexts, and the
 context count is a *system-wide* limit (`BridgeProfile.max_secure_contexts`),
@@ -8,6 +9,16 @@ budget, so adding replicas *redistributes* bridge bandwidth across the fleet
 rather than multiplying it.  CC-off there is no secure channel and the budget
 is unconstrained — the CC-mode asymmetry every other layer of this repo
 models, surfacing at the resource-allocation layer.
+
+Pinned host memory is the same shape one resource over (`PinnedBudget`):
+each replica's StagingArena pins `staging_arena_bytes` of host memory, and
+pinned pages are a host-wide commodity the kernel will not overcommit —
+bounce buffers, the secure channels' staging slots and every arena slab all
+draw from it.  The cluster therefore plans both L4 resources: contexts from
+`SecureContextBudget` (partial grants shrink), arena bytes from
+`PinnedBudget` (over-subscription is *rejected* at replica spawn — a
+shrunken arena silently changes hit rates, so the planner must resize the
+fleet explicitly instead).
 """
 
 from __future__ import annotations
@@ -113,3 +124,91 @@ class SecureContextBudget:
         base, extra = divmod(self.limit, n_holders)
         shares = [base + (1 if i < extra else 0) for i in range(n_holders)]
         return [min(requested, s) for s in shares]
+
+
+# ---------------------------------------------------------------------------------
+# Pinned host memory: the second host-wide L4 resource the cluster plans
+# ---------------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PinnedLease:
+    """A replica's claim on the host-wide pinned-memory pool (arena bytes)."""
+
+    lease_id: int
+    holder: str
+    nbytes: int
+
+
+class PinnedBudget:
+    """Host-wide pinned-byte budget for replica staging arenas.
+
+    Sibling to `SecureContextBudget` with one deliberate asymmetry: context
+    leases shrink to what is left (fewer channels = less bandwidth, still
+    correct), but an arena lease is **full grant or rejection** — a replica
+    spawned with a silently smaller arena than its config asked for would
+    evict slabs the deployment was sized around, so over-subscription
+    surfaces at spawn time as `BudgetExhausted` instead of as a runtime
+    hit-rate regression.  ``limit_bytes is None`` means unconstrained (the
+    operator has not declared a host pinned budget).
+    """
+
+    def __init__(self, limit_bytes: Optional[int] = None):
+        if limit_bytes is not None and limit_bytes < 0:
+            raise ValueError(f"pinned budget cannot be negative: {limit_bytes}")
+        self.limit_bytes = limit_bytes
+        self._leases: dict[str, PinnedLease] = {}
+        self._ids = itertools.count()
+
+    # -- accounting ------------------------------------------------------------------
+
+    def allocated(self) -> int:
+        return sum(l.nbytes for l in self._leases.values())
+
+    def available(self) -> Union[int, float]:
+        if self.limit_bytes is None:
+            return math.inf
+        return self.limit_bytes - self.allocated()
+
+    def utilization(self) -> float:
+        if self.limit_bytes is None or self.limit_bytes == 0:
+            return 0.0
+        return self.allocated() / self.limit_bytes
+
+    def leases(self) -> dict[str, PinnedLease]:
+        return dict(self._leases)
+
+    # -- lease lifecycle -------------------------------------------------------------
+
+    def acquire(self, holder: str, nbytes: int) -> PinnedLease:
+        """Lease exactly `nbytes` of pinned memory; raises BudgetExhausted
+        when the host pool cannot cover it (no partial grants — see class
+        docstring).  A zero-byte lease is legal: a replica running with the
+        legacy unbudgeted staging holds a recorded, empty claim."""
+        if nbytes < 0:
+            raise ValueError(f"lease cannot be negative: {nbytes}")
+        if holder in self._leases:
+            raise ValueError(f"{holder!r} already holds a pinned lease; "
+                             f"release it first")
+        if self.limit_bytes is not None and nbytes > self.available():
+            raise BudgetExhausted(
+                f"pinned budget over-subscribed: {holder!r} wants {nbytes} B "
+                f"but only {self.available()} of {self.limit_bytes} B remain "
+                f"({len(self._leases)} leaseholders)")
+        lease = PinnedLease(next(self._ids), holder, int(nbytes))
+        self._leases[holder] = lease
+        return lease
+
+    def release(self, holder: str) -> None:
+        self._leases.pop(holder, None)
+
+    # -- fleet planning --------------------------------------------------------------
+
+    def max_replicas(self, arena_bytes: int) -> Union[int, float]:
+        """How many replicas of `arena_bytes` each the host pool can pin —
+        the arena-side sibling of `SecureContextBudget.fair_share`."""
+        if self.limit_bytes is None:
+            return math.inf
+        if arena_bytes <= 0:
+            return math.inf
+        return (self.limit_bytes - self.allocated()) // arena_bytes

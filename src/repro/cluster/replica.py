@@ -43,7 +43,7 @@ from repro.trace import opclasses as oc
 from repro.trace.recorder import TraceRecorder
 from repro.trace.tape import BridgeTape
 
-from .budget import ContextLease
+from .budget import ContextLease, PinnedLease
 
 MS = 1e-3
 
@@ -111,17 +111,37 @@ class ReplicaMetrics:
     op_class_seconds: dict[str, float] = field(default_factory=dict)
     #: staging-arena hit rate (1.0 when no arena: nothing is missing)
     arena_hit_rate: float = 1.0
+    # ---- slot-masked decode / overlap economics (DESIGN.md §8) -----------
+    #: slot-steps deferred by slot-masked decode (restoring slots that sat
+    #: a step out while the rest of the batch kept decoding)
+    deferred_slots: int = 0
+    #: restore barriers that found the pipeline already drained — the
+    #: restore window was filled with useful decode work
+    barrier_noops: int = 0
+    #: barrier_noops / (barrier_noops + barrier_waits): the router's
+    #: overlap-aware routing signal (1.0 when no barriers resolved yet —
+    #: an untested replica is neutral, not maximally cold)
+    overlap_noop_share: float = 1.0
 
 
 class Replica:
     def __init__(self, replica_id: str, model, tenant: Tenant,
                  lease: ContextLease, bridge: BridgeModel,
-                 cfg: Optional[ReplicaConfig] = None, *, seed: int = 0):
+                 cfg: Optional[ReplicaConfig] = None, *, seed: int = 0,
+                 pinned_lease: Optional[PinnedLease] = None):
         self.replica_id = replica_id
         self.tenant = tenant
         self.lease = lease
+        #: claim on the host-wide pinned pool covering this replica's arena
+        #: (None = legacy: the operator declared no host pinned budget)
+        self.pinned_lease = pinned_lease
         self.bridge = bridge
         self.cfg = cfg or ReplicaConfig()
+        if pinned_lease is not None \
+                and pinned_lease.nbytes < self.cfg.staging_arena_bytes:
+            raise ValueError(
+                f"pinned lease {pinned_lease.nbytes} B cannot cover "
+                f"staging_arena_bytes={self.cfg.staging_arena_bytes}")
         self.clock = VirtualClock()
         defaults = dataclasses.replace(
             cc_aware_defaults(bridge.cc_on, concurrency=self.cfg.max_batch),
@@ -161,6 +181,10 @@ class Replica:
             coalescer=self.engine.coalescer,
             pipelined_restore=defaults.pipelined_restore,
             restore_chunk_bytes=self.cfg.effective_restore_chunk_bytes)
+        # restore completions flow to the engine's slot-granular read sets
+        # (OverlapScheduler) through the offload layer's own callback — the
+        # admission path no longer hand-plumbs done_t per call site
+        self.offload.on_restore_done.append(self.engine.mark_restore)
         self.pages = PagePool(
             n_pages=self.cfg.n_pages, page_size=self.cfg.block_tokens,
             n_kv_heads=1, head_dim=1, n_layers=1)
@@ -193,13 +217,15 @@ class Replica:
             self.offload.observe(h)
         warm = [h for h in hashes if h in self.offload.host_store]
         if warm:
-            hits, _ = self.offload.restore(warm)
+            # keyed restore: the offload layer notifies the engine's restore
+            # barrier itself (on_restore_done -> mark_restore).  Pipelined
+            # restores land after clock.now: the engine barriers before the
+            # request's first KV read, and — overlap preference on — fills
+            # the drain window with other decode work; slot-masked decode
+            # keeps the rest of the batch stepping if the request is already
+            # resident when a later restore lands.
+            hits, _ = self.offload.restore(warm, key=req.request_id)
             self.warm_blocks_restored += hits
-            # pipelined restores land after clock.now: the engine must
-            # barrier before first KV read, and — overlap preference on —
-            # prefers filling the drain window with other decode work
-            self.engine.mark_restore(req.request_id,
-                                     self.offload.last_restore_done_t)
         warm_tokens = len(warm) * self.cfg.block_tokens
         cold_tokens = max(0, len(req.prompt) - warm_tokens)
         if cold_tokens:
@@ -296,8 +322,21 @@ class Replica:
         waits = [self.clock.now - r.enqueue_t for r in self.engine.queue]
         return float(np.mean(waits)) if waits else 0.0
 
+    def overlap_noop_share(self) -> float:
+        """Fraction of resolved restore barriers that were no-ops — the
+        restore windows this replica already fills with decode work.  The
+        router's overlap-aware preference reads this (high share = adding a
+        restored request here is likely free).  1.0 when no barriers have
+        resolved yet: an untested replica is not penalized."""
+        ov = self.engine.overlap.stats
+        resolved = ov.barrier_noops + ov.barrier_waits
+        if resolved == 0:
+            return 1.0
+        return ov.barrier_noops / resolved
+
     def metrics(self) -> ReplicaMetrics:
         per_op = self.tape().op_class_seconds()
+        ov = self.engine.overlap.stats
         return ReplicaMetrics(
             replica_id=self.replica_id,
             queued=len(self.engine.queue),
@@ -308,6 +347,9 @@ class Replica:
             op_class_seconds=per_op,
             arena_hit_rate=(self.arena.stats.hit_rate
                             if self.arena is not None else 1.0),
+            deferred_slots=ov.deferred_slots,
+            barrier_noops=ov.barrier_noops,
+            overlap_noop_share=self.overlap_noop_share(),
         )
 
     def stats(self) -> dict:

@@ -14,6 +14,13 @@ different placement would have avoided entirely.  Routing policies:
                    least-loaded when nothing matches.  Keeps reuse evidence
                    concentrated, so warm prefixes restore instead of
                    recomputing — the cluster-level warm-TTFT lever.
+
+Orthogonal to the policy, `prefer_overlap_filled` (off by default) breaks
+load ties by each replica's barrier-noop share (`overlap_noop_share`,
+exported from `engine.stats()["overlap"]`): a replica whose restore windows
+are already being filled with decode work (high noop share) absorbs another
+restore-heavy request nearly for free, while one paying idle barrier waits
+will serialize it — the fleet-level face of the §5.5 overlap scheduler.
 """
 
 from __future__ import annotations
@@ -24,7 +31,7 @@ from typing import Optional
 from repro.core.bridge import TPU_V5E, BridgeModel, BridgeProfile
 from repro.serving.engine import Request
 
-from .budget import SecureContextBudget
+from .budget import PinnedBudget, SecureContextBudget
 from .replica import Replica, ReplicaConfig, prompt_prefix_hashes
 from .tenant_manager import TenantManager
 
@@ -39,7 +46,9 @@ class ClusterRouter:
                  routing: RoutingPolicy = RoutingPolicy.PREFIX_AFFINITY,
                  max_cluster_queue: int = 4096,
                  tenant_manager: Optional[TenantManager] = None,
-                 budget: Optional[SecureContextBudget] = None):
+                 budget: Optional[SecureContextBudget] = None,
+                 pinned_budget: Optional[PinnedBudget] = None,
+                 prefer_overlap_filled: bool = False):
         if not replicas:
             raise ValueError("cluster needs at least one replica")
         self.replicas = replicas
@@ -47,6 +56,10 @@ class ClusterRouter:
         self.max_cluster_queue = max_cluster_queue
         self.tenant_manager = tenant_manager
         self.budget = budget
+        self.pinned_budget = pinned_budget
+        #: overlap-aware preference: break load ties toward replicas whose
+        #: restore windows are already being filled (high barrier-noop share)
+        self.prefer_overlap_filled = prefer_overlap_filled
         self.block_tokens = replicas[0].cfg.block_tokens
         self.rejected = 0
         self.affinity_hits = 0
@@ -91,10 +104,22 @@ class ClusterRouter:
         warm = len(want & replica.kv_inventory()) if want else 0
         return replica, False, warm
 
+    def _overlap_share(self, replica) -> float:
+        """Barrier-noop share of a replica (1.0 when it exports none)."""
+        share = getattr(replica, "overlap_noop_share", None)
+        return float(share()) if callable(share) else 1.0
+
     def _least_loaded(self) -> Replica:
         scores = [r.load_score() for r in self.replicas]
         best = min(scores)
         tied = [r for r, s in zip(self.replicas, scores) if s <= best + 1e-12]
+        if self.prefer_overlap_filled and len(tied) > 1:
+            # overlap-aware preference: equally-loaded replicas are NOT
+            # equal if one is already hiding restore drains under decode
+            # work — send the next request where the window is being filled
+            shares = [self._overlap_share(r) for r in tied]
+            top = max(shares)
+            tied = [r for r, s in zip(tied, shares) if s >= top - 1e-12]
         pick = tied[self._rr % len(tied)]
         self._rr += 1
         return pick
@@ -115,6 +140,8 @@ class ClusterRouter:
             r.close()
             if self.budget is not None:
                 self.budget.release(r.replica_id)
+            if self.pinned_budget is not None:
+                self.pinned_budget.release(r.replica_id)
             if self.tenant_manager is not None:
                 self.tenant_manager.decommission(r.tenant.tenant_id)
 
@@ -167,21 +194,34 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
                   replica_cfg: Optional[ReplicaConfig] = None,
                   max_cluster_queue: int = 4096,
                   require_attestation: bool = True,
+                  host_pinned_bytes: Optional[int] = None,
+                  prefer_overlap_filled: bool = False,
                   seed: int = 0) -> ClusterRouter:
-    """Provision a cluster: fabric tenants, fair-share context leases, and
-    one replica per tenant behind a routing front end."""
+    """Provision a cluster: fabric tenants, fair-share context leases,
+    pinned-arena leases from the host-wide pool, and one replica per tenant
+    behind a routing front end.
+
+    `host_pinned_bytes` declares the host's pinned-memory budget: each
+    replica's `staging_arena_bytes` is leased from it at spawn, and a fleet
+    whose arenas over-subscribe the pool fails *here* (BudgetExhausted)
+    instead of degrading at runtime.  None = unconstrained (legacy).
+    """
     cfg = replica_cfg or ReplicaConfig()
     tm = TenantManager(profile, cc_on=cc_on)
     budget = SecureContextBudget(profile, cc_on=cc_on)
+    pinned = PinnedBudget(host_pinned_bytes)
     grants = budget.fair_share(n_replicas, cfg.contexts_requested)
     replicas = []
     for i in range(n_replicas):
         tenant = tm.provision(f"tenant-{i}", partition_size,
                               require_attestation=require_attestation)
         lease = budget.acquire(f"replica-{i}", grants[i])
+        pinned_lease = pinned.acquire(f"replica-{i}", cfg.staging_arena_bytes)
         bridge = BridgeModel(profile, cc_on=cc_on)
         replicas.append(Replica(f"replica-{i}", model, tenant, lease, bridge,
-                                cfg, seed=seed + i))
+                                cfg, seed=seed + i, pinned_lease=pinned_lease))
     return ClusterRouter(replicas, routing=routing,
                          max_cluster_queue=max_cluster_queue,
-                         tenant_manager=tm, budget=budget)
+                         tenant_manager=tm, budget=budget,
+                         pinned_budget=pinned,
+                         prefer_overlap_filled=prefer_overlap_filled)

@@ -46,6 +46,10 @@ class CopyRecord:
     #: prefill/decode work priced by core.compute.ComputeModel — no bytes
     #: cross the bridge; direction/staging are empty by construction)
     kind: str = "crossing"
+    #: which roofline term won for a compute record ("compute" | "memory";
+    #: "" = unknown/crossing) — lets replay re-price at the matching parity
+    #: factor instead of conservatively assuming compute-bound
+    bound: str = ""
 
 
 @dataclass

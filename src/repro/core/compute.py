@@ -25,7 +25,7 @@ not just its crossings.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -121,6 +121,30 @@ class ComputeModel:
 
     def decode_step_s(self, batch: int, *, kv_len: float = 0.0) -> float:
         return self.decode_charge(batch, kv_len=kv_len).seconds
+
+    # -- masked decode (slot-masked execution; DESIGN.md §8) ----------------------------
+
+    def decode_charge_masked(self, kv_lens: "Sequence[float]") -> ComputeCharge:
+        """One slot-masked decode step priced for exactly the ready slots.
+
+        The engine steps only slots whose KV restores have landed; deferred
+        slots stay resident but contribute neither FLOPs nor KV reads this
+        step.  The weight-read term is batch-independent (every active param
+        streams once per step regardless of how many slots consume it), so a
+        masked step is cheaper than the full batch only by the deferred
+        slots' FLOPs and KV traffic — which is exactly the charge the
+        coalescer deadlines and restore-overlap windows must see, or the
+        clock would bill deferred work that never ran.  Per-slot ``kv_lens``
+        (not a batch mean) because the ready set's prefix lengths are known.
+        """
+        ready = max(1, len(kv_lens))
+        flops = 2.0 * self.active_params * ready
+        hbm = (self.active_params * self.bytes_per_param
+               + sum(max(0.0, k) for k in kv_lens) * self.kv_bytes_per_token())
+        return self._charge("decode", flops, hbm)
+
+    def decode_step_masked_s(self, kv_lens: "Sequence[float]") -> float:
+        return self.decode_charge_masked(kv_lens).seconds
 
     # -- prefill ------------------------------------------------------------------------
 

@@ -240,7 +240,7 @@ class TransferGateway:
     # -- device-local compute ----------------------------------------------------------
 
     def charge_compute(self, seconds: float, *, op_class: str,
-                       tags: tuple = ()) -> float:
+                       tags: tuple = (), bound: str = "") -> float:
         """Charge device-local compute (prefill/decode forward) to the clock.
 
         Compute is a first-class interval on the engine's virtual clock —
@@ -249,7 +249,9 @@ class TransferGateway:
         moves over the bridge, so it lands on the tape as a ``kind="compute"``
         record (direction/staging empty, channel -1 — the engine-serial path)
         and is counted in ``stats.compute_time_s``, never ``bridge_time_s``.
-        Pricing belongs to the caller (core.compute.ComputeModel).
+        Pricing belongs to the caller (core.compute.ComputeModel); so does
+        ``bound`` ("compute"/"memory": which roofline term won — replay uses
+        it to pick the matching CC parity factor when repricing).
         """
         if seconds < 0:
             raise ValueError(f"cannot charge negative compute {seconds}")
@@ -260,7 +262,7 @@ class TransferGateway:
             op_class, 0, seconds, self.bridge.cc_on,
             direction="", staging="", channel=-1,
             t_start=end - seconds, t_end=end, charged=True,
-            tags=tuple(tags), kind="compute")
+            tags=tuple(tags), kind="compute", bound=bound)
         self.records.append(rec)
         for hook in self.on_record:
             hook(rec)

@@ -85,6 +85,13 @@ class RuntimeDefaults:
     #: other decode work fills the window).  The restore_barrier correctness
     #: edge is ALWAYS enforced; this flag only controls the preference.
     overlap_scheduler: bool = field(default_factory=overlap_scheduler_default)
+    # ---- slot-masked decode (DESIGN.md §8) ------------------------------------
+    #: step only the slots whose KV restores have landed (slot-granular read
+    #: sets) instead of barriering the whole decode batch on any one slot's
+    #: pending restore.  Inert without late restores in flight — with no
+    #: pending restore the masked path is byte-identical to the fused batch
+    #: step, which is what keeps the golden tapes stable with the flag on.
+    slot_masked_decode: bool = True
 
 
 def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,

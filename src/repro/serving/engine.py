@@ -77,6 +77,10 @@ class StepTrace:
     drain_bytes: int
     policy: str
     virtual_t: float
+    #: slots that sat this step out because their KV restore pipeline was
+    #: still draining (slot-masked decode; 0 on every unmasked step, so a
+    #: non-restore workload's trace is identical with the flag on or off)
+    deferred: int = 0
 
 
 class ServingEngine:
@@ -246,8 +250,10 @@ class ServingEngine:
         if self.compute is not None:
             cold = max(0, len(req.prompt) - req.warm_tokens)
             if cold:
+                charge = self.compute.prefill_charge(cold)
                 self.gateway.charge_compute(
-                    self.compute.prefill_s(cold), op_class=oc.PREFILL_COMPUTE)
+                    charge.seconds, op_class=oc.PREFILL_COMPUTE,
+                    bound=charge.bound)
                 if self.coalescer is not None:
                     self.coalescer.poll()   # prefill compute moved the clock
         self._insert_slot_cache(pre_cache, slot)
@@ -302,15 +308,69 @@ class ServingEngine:
 
     # -- the decode step under each policy ------------------------------------------------
 
+    def _ready_slots(self, slots: list) -> tuple[list, list]:
+        """Split this step's slots into (ready, deferred) by restore state.
+
+        Slot-masked decode (DESIGN.md §8): each slot's read set is its own
+        request's KV, so readiness is per slot — a slot whose restore
+        pipeline is still draining sits the step out (stays resident,
+        rejoins once the pipeline lands) instead of barriering the whole
+        batch.  The barrier law survives intact in two places: a ready slot
+        with a *landed* restore resolves it here (a barrier no-op — the
+        overlap win), and when no slot is ready the nearest pipeline is paid
+        as a real barrier so the batch always makes progress.  With the flag
+        off, or no restores in flight, every slot is ready and the step is
+        byte-identical to the fused batch step.
+        """
+        if not self.defaults.slot_masked_decode or not self.overlap.pending:
+            return list(slots), []
+        key_of = {s: self.active[s].request_id for s in slots}
+        mask = self.overlap.ready_mask(key_of)
+        ready = [s for s in slots if mask[s]]
+        deferred = [s for s in slots if not mask[s]]
+        if not ready:
+            # law, not preference: nothing can step — pay the nearest
+            # pipeline's barrier, then re-ask (others may have landed too)
+            nearest = min(
+                deferred, key=lambda s: self.overlap.pending_done_t(key_of[s]))
+            if self.overlap.restore_barrier(key_of[nearest]) \
+                    and self.coalescer is not None:
+                self.coalescer.poll()   # the barrier wait moved the clock
+            mask = self.overlap.ready_mask(key_of)
+            ready = [s for s in slots if mask[s]]
+            deferred = [s for s in slots if not mask[s]]
+        for s in ready:
+            # first KV read of a landed restore: resolve it (barrier no-op)
+            self.overlap.restore_barrier(key_of[s])
+        for s in deferred:
+            self.overlap.record_slot_deferral(key_of[s])
+        if deferred and self.coalescer is not None:
+            # deferral masks *slots*, never flushes: crossings queued by
+            # deferred slots keep aging toward deadline_s on this clock
+            self.coalescer.poll(source="deferral")
+        return ready, deferred
+
     def step(self) -> int:
-        """One engine iteration; returns number of active sequences stepped."""
+        """One engine iteration; returns number of active sequences stepped.
+
+        With ``slot_masked_decode`` on, slots whose restore pipelines are
+        still draining are masked out of the step (``_ready_slots``): prep
+        bytes, the compute charge and the drain cover only the ready subset,
+        while deferred slots stay resident and rejoin next step.
+        """
         self._admit()
         if not self.active:
             return 0
         self.step_count += 1
         slots = sorted(self.active)
+        ready, deferred = self._ready_slots(slots)
         b = self.max_batch
 
+        # every resident slot feeds the forward (the jitted step is a fixed
+        # full-batch shape); a deferred slot contributes its *current*
+        # (token, index), so its cache write this step is an idempotent
+        # rewrite of the one its rejoin step will perform — masking is an
+        # accounting and consumption boundary, not a shape change
         tokens = np.zeros((b, 1), np.int32)
         index = np.zeros((b,), np.int32)
         for s in slots:
@@ -319,8 +379,9 @@ class ServingEngine:
             index[s] = req.index
 
         # --- input prep crossings (scatter/sampling-index analogue) ---
+        # mask-aware: per-slot prep covers only the slots actually stepping
         small_inputs = [tokens, index] + [
-            np.zeros((len(slots),), np.int32) for _ in range(4)]
+            np.zeros((len(ready),), np.int32) for _ in range(4)]
         if self.coalescer is not None:
             # bridge_opt: uploads queue and flush fused across steps
             prep_class = (oc.ALLOC_H2D
@@ -335,10 +396,13 @@ class ServingEngine:
         else:
             self.gateway.batch_h2d(small_inputs, op_class=oc.PREP_BATCHED_H2D)
 
-        # a decode step reads every active slot's KV: any restore still in
+        # a decode step reads every stepping slot's KV: any restore still in
         # flight for a stepping request must land first (PipeLLM barrier) —
-        # requests not reading restored KV never pay this
-        if self.overlap.pending:
+        # requests not reading restored KV never pay this.  With slot
+        # masking on, _ready_slots already resolved the stepping slots'
+        # restores (and deferred the rest), so this whole-batch barrier is
+        # the legacy flag-off path.
+        if not self.defaults.slot_masked_decode and self.overlap.pending:
             waited = sum(self.overlap.restore_barrier(self.active[s].request_id)
                          for s in slots)
             if waited and self.coalescer is not None:
@@ -348,42 +412,71 @@ class ServingEngine:
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(index))
         # the forward+sample is a first-class clock charge: this is what
         # ages coalescer queues toward their deadline and opens the window
-        # pipelined restores drain into
+        # pipelined restores drain into.  A masked step charges the *masked*
+        # batch — the clock, the coalescer deadlines and the overlap windows
+        # all see the true smaller charge, never the full-batch price.
         if self.compute is not None:
-            kv_len = float(np.mean([index[s] for s in slots]))
-            self.gateway.charge_compute(
-                self.compute.decode_step_s(len(slots), kv_len=kv_len),
-                op_class=oc.DECODE_COMPUTE)
+            if deferred:
+                charge = self.compute.decode_charge_masked(
+                    [float(index[s]) for s in ready])
+                # one MASKED per masked step, one DEFERRED per slot it
+                # deferred: tape tag counts read as (masked steps,
+                # deferred slot-steps) without decoding StepTraces
+                self.gateway.charge_compute(
+                    charge.seconds, op_class=oc.DECODE_MASKED,
+                    tags=(oc.MASKED,) + (oc.DEFERRED,) * len(deferred),
+                    bound=charge.bound)
+            else:
+                kv_len = float(np.mean([index[s] for s in ready]))
+                charge = self.compute.decode_charge(len(ready), kv_len=kv_len)
+                self.gateway.charge_compute(
+                    charge.seconds, op_class=oc.DECODE_COMPUTE,
+                    bound=charge.bound)
         self.key, sk = jax.random.split(self.key)
+        # batch sampling params come from the lowest *resident* slot — a
+        # mask-independent choice, so masking cannot change which request's
+        # params price the batch (the one-params-per-batch limitation itself
+        # predates masking)
         next_tokens = sample(logits, sk, self.active[slots[0]].sampling)
 
         # --- output drain (the policy-defining crossing) ---
+        # mask-aware: only the ready slots' tokens drain — a deferred slot's
+        # sampled value is discarded and its rejoin step recomputes it from
+        # the identical cache state.  Under greedy decode (temperature 0,
+        # the serving default) that reproduces the unmasked run's tokens
+        # exactly; stochastic sampling draws the rejoin token under a later
+        # step's key, so token identity across the flag is a greedy-only
+        # guarantee
+        drain_tokens = (next_tokens[jnp.asarray(np.asarray(ready, np.int32))]
+                        if deferred else next_tokens)
         if self.coalescer is not None:
             # bridge_opt: token values land now (they stay usable on-device
             # for the next step); the drain's toll joins the fused flush
-            host_tokens = self.coalescer.d2h(next_tokens, op_class=oc.DRAIN_D2H)
+            host_tokens = self.coalescer.d2h(drain_tokens, op_class=oc.DRAIN_D2H)
         elif self.policy is SchedulingPolicy.WORKER_DRAIN:
             done = threading.Event()
             result = {}
-            self._drain_q.put((next_tokens, lambda h: (result.update(h=h),
-                                                       done.set())))
+            self._drain_q.put((drain_tokens, lambda h: (result.update(h=h),
+                                                        done.set())))
             done.wait()
             host_tokens = result["h"]
         else:
             op = (oc.DRAIN_D2H_NONBLOCKING
                   if self.policy is SchedulingPolicy.ASYNC_OVERLAP else oc.DRAIN_D2H)
-            host_tokens = self.gateway.d2h(next_tokens, op_class=op)
+            host_tokens = self.gateway.d2h(drain_tokens, op_class=op)
 
         self.trace.append(StepTrace(
-            step=self.step_count, active=len(slots),
+            step=self.step_count, active=len(ready),
             prep_crossings=len(small_inputs),
             prep_bytes=sum(a.nbytes for a in small_inputs),
             drain_bytes=int(np.asarray(host_tokens).nbytes),
-            policy=self.policy.value, virtual_t=self.clock.now))
+            policy=self.policy.value, virtual_t=self.clock.now,
+            deferred=len(deferred)))
 
-        for s in slots:
+        host = np.asarray(host_tokens)
+        for pos, s in enumerate(ready):
             req = self.active[s]
-            tok = int(host_tokens[s])
+            tok = int(host[pos] if deferred else host[s])
             req.output_tokens.append(tok)
             req.index += 1
             req.decode_steps += 1
@@ -395,7 +488,7 @@ class ServingEngine:
             # compute moved the clock this step: let aged queues meet their
             # deadline now instead of waiting for the next submission
             self.coalescer.poll()
-        return len(slots)
+        return len(ready)
 
     def run(self, max_steps: int = 10_000) -> dict:
         steps = 0

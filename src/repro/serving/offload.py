@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -77,6 +77,12 @@ class OffloadManager:
         #: pipelined ones.  Callers feed it to the engine's restore barrier
         #: (ServingEngine.mark_restore) so first use blocks correctly.
         self.last_restore_done_t: float = 0.0
+        #: per-request restore-completion subscribers ``(key, done_t)``:
+        #: `restore(..., key=...)` notifies each the moment a restore's
+        #: landing time is known, so the scheduler's slot-granular read sets
+        #: (OverlapScheduler via ServingEngine.mark_restore) track every
+        #: restore without the admission layer hand-plumbing done_t around.
+        self.on_restore_done: list[Callable[[str, float], None]] = []
 
     # -- observation (prefix traffic feeds the evidence) --------------------------------
 
@@ -134,13 +140,18 @@ class OffloadManager:
 
     # -- restore -------------------------------------------------------------------------
 
-    def restore(self, token_hashes: list) -> tuple[int, int]:
+    def restore(self, token_hashes: list, *,
+                key: Optional[str] = None) -> tuple[int, int]:
         """Restore a prefix's blocks from the host store.  Default: bulk,
         pooled, blocking (drained pattern).  With `pipelined_restore` and
         >= 2 pool contexts, the prefix is split into channel-sized chunks
         double-buffered across the pool so restore overlaps subsequent
         decode steps (only the pipeline fill blocks — the §6.2 +131%
-        penalty attacked directly).  Returns (hits, bytes_restored)."""
+        penalty attacked directly).  `key` names the request whose KV this
+        restore feeds; when given and blocks were restored, every
+        `on_restore_done` subscriber is called with ``(key, done_t)`` so
+        the engine's slot-granular restore barrier tracks it.  Returns
+        (hits, bytes_restored)."""
         hits = [self.host_store[h] for h in token_hashes if h in self.host_store]
         misses = len(token_hashes) - len(hits)
         self.stats.restore_hits += len(hits)
@@ -164,6 +175,9 @@ class OffloadManager:
                 self.last_restore_done_t = self.gateway.clock.now
             self.stats.restored_blocks += len(hits)
             self.stats.restored_bytes += total
+            if key is not None:
+                for cb in self.on_restore_done:
+                    cb(key, self.last_restore_done_t)
         return len(hits), total
 
 

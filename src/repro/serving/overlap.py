@@ -23,12 +23,20 @@ The preference is a flag (``prefer_overlap``, CI-swept via
 restores in flight the scheduler is inert — admission order and every
 crossing are identical with the preference on or off, which is what keeps
 the golden tapes stable across the CI matrix.
+
+Slot-masked decode (DESIGN.md §8) makes the law slot-granular for running
+requests: ``ready_mask`` answers, per stepping slot, whether that slot's
+read set (its own request's KV) still has a restore draining, so the
+engine steps the ready subset instead of barriering the whole batch on one
+slot's pipeline.  Deferrals the engine takes are counted in
+``deferred_slots`` — the masked sibling of ``barrier_noops`` (window
+hidden) and ``barrier_waits`` (window paid idle).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Mapping, Optional
 
 from repro.core.channels import SecureChannelPool, VirtualClock
 
@@ -49,6 +57,11 @@ class OverlapStats:
     barrier_wait_s: float = 0.0
     #: barriers that found the pipeline already drained (the overlap win)
     barrier_noops: int = 0
+    #: slot-steps deferred by slot-masked decode: a slot whose restore was
+    #: still draining sat out one engine step while the rest of the batch
+    #: stepped (one count per slot per step — the masked-decode analogue of
+    #: a barrier wait the batch did NOT pay)
+    deferred_slots: int = 0
     restores_noted: int = 0
 
 
@@ -80,6 +93,37 @@ class OverlapScheduler:
 
     def outstanding(self) -> int:
         return len(self.pending)
+
+    def pending_done_t(self, key: str) -> Optional[float]:
+        """Virtual time `key`'s pending restore lands (None when none)."""
+        return self.pending.get(key)
+
+    # -- slot-granular read sets (slot-masked decode; DESIGN.md §8) --------------------
+
+    def ready_mask(self, slot_keys: Mapping[int, str]) -> Dict[int, bool]:
+        """Per-slot readiness for one decode step.
+
+        ``slot_keys`` maps each stepping slot to the request key whose KV it
+        reads — the slot's read set.  A slot is ready iff that read set has
+        no restore still draining (nothing pending, or the pipeline already
+        landed on the virtual clock).  This is the decode-batch form of the
+        PipeLLM barrier: instead of one barrier summed over every stepping
+        slot (whole-batch stall), the engine steps the ready subset and
+        re-asks next step — the mask is re-evaluated against ``clock.now``
+        each call, so deferred slots become ready exactly when their
+        pipeline drains.  Pure: no stats move here (the engine records
+        deferrals it actually takes via ``record_slot_deferral``).
+        """
+        now = self.clock.now
+        out: Dict[int, bool] = {}
+        for slot, key in slot_keys.items():
+            done_t = self.pending.get(key)
+            out[slot] = done_t is None or done_t - now <= EPS
+        return out
+
+    def record_slot_deferral(self, key: str) -> None:
+        """Count one slot-step deferral taken by slot-masked decode."""
+        self.stats.deferred_slots += 1
 
     # -- the preference ----------------------------------------------------------------
 
@@ -146,6 +190,7 @@ class OverlapScheduler:
             "barrier_waits": self.stats.barrier_waits,
             "barrier_wait_s": self.stats.barrier_wait_s,
             "barrier_noops": self.stats.barrier_noops,
+            "deferred_slots": self.stats.deferred_slots,
             "restores_noted": self.stats.restores_noted,
             "outstanding": self.outstanding(),
             "prefer_overlap": self.prefer_overlap,

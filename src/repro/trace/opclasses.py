@@ -47,6 +47,11 @@ KV_RESTORE_PIPELINED = "kv_restore_pipelined"
 # emitted via `TransferGateway.charge_compute` (which stamps the kind).
 #: one batched decode step's forward+sample compute (ComputeModel roofline)
 DECODE_COMPUTE = "decode_compute"
+#: a slot-masked decode step's compute (DESIGN.md §8): only the ready slots
+#: (restores landed) stepped; priced for the masked batch, never the full
+#: one.  A separate class from DECODE_COMPUTE so tapes distinguish masked
+#: steps — replay and attribution must not average the two shapes together.
+DECODE_MASKED = "decode_masked"
 #: prompt-processing compute at admission (cold tokens only — restored/warm
 #: prefix tokens skip the forward and therefore the charge)
 PREFILL_COMPUTE = "prefill_compute"
@@ -55,6 +60,13 @@ PREFILL_COMPUTE = "prefill_compute"
 #: arena resolved a crossing's staging buffer
 ARENA_HIT = "arena_hit"
 ARENA_MISS = "arena_miss"
+#: slot-masked decode tags on DECODE_MASKED compute records: MASKED appears
+#: once per masked step, DEFERRED once per slot that step deferred — so a
+#: tape's tag counts read directly as (masked steps, deferred slot-steps).
+#: A step with an all-ready mask takes the plain DECODE_COMPUTE path and
+#: carries neither.
+MASKED = "masked"
+DEFERRED = "deferred"
 
 #: classes whose crossings are per-step input preparation (candidates for
 #: batching into one registered crossing in a counterfactual replay).  The

@@ -15,6 +15,7 @@ from typing import Optional
 from repro.core.accounting import CopyRecord
 from repro.core.gateway import TransferGateway
 
+from . import opclasses as oc
 from .tape import BridgeTape, TapeMeta, TapeRecord
 
 
@@ -62,6 +63,21 @@ class TraceRecorder:
     def tape(self) -> BridgeTape:
         with self._lock:
             return BridgeTape(meta=self.meta, records=list(self._records))
+
+    def summary(self) -> dict:
+        """Cheap live view of the captured stream (no tape snapshot): record
+        and crossing counts plus the slot-masked decode markers — how many
+        steps ran masked (one MASKED tag each) and how many slot-steps they
+        deferred in total (one DEFERRED tag per deferred slot).  The
+        bridge_opt restore-under-decode sweep reads this instead of
+        snapshotting a full tape per probe."""
+        with self._lock:
+            n = len(self._records)
+            compute = sum(1 for r in self._records if r.is_compute)
+            masked = sum(1 for r in self._records if oc.MASKED in r.tags)
+            deferred = sum(r.tags.count(oc.DEFERRED) for r in self._records)
+        return {"records": n, "crossings": n - compute, "compute": compute,
+                "masked_steps": masked, "deferred_slot_steps": deferred}
 
 
 def record_gateway(gateway: TransferGateway, *, policy: str = "",

@@ -71,6 +71,9 @@ class RewrittenCrossing:
     #: "crossing" or "compute" — compute intervals pass through every policy
     #: rewrite untouched and re-price at parity, never as bridge traffic
     kind: str = "crossing"
+    #: roofline boundness of a compute record ("compute"/"memory"/"" for
+    #: pre-boundness tapes) — selects which parity factor reprices it
+    bound: str = ""
 
 
 def rewrite_for_policy(records: Sequence[TapeRecord],
@@ -105,7 +108,7 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
             flush()
             out.append(RewrittenCrossing(r.op_class, r.direction, r.nbytes,
                                          r.staging, r.duration_s,
-                                         kind=r.kind))
+                                         kind=r.kind, bound=r.bound))
             continue
         if policy in (SchedulingPolicy.SYNC_DRAIN.value,
                       SchedulingPolicy.WORKER_DRAIN.value):
@@ -214,19 +217,29 @@ class TraceReplayer:
         else:
             policy = policy or self.tape.meta.policy
             stream = [RewrittenCrossing(r.op_class, r.direction, r.nbytes,
-                                        r.staging, r.duration_s, kind=r.kind)
+                                        r.staging, r.duration_s, kind=r.kind,
+                                        bound=r.bound)
                       for r in self.tape.records]
 
         # compute re-prices at parity (L5: device-local work is ~unaffected
         # by CC): recorded = t_ideal / parity_rec, counterfactual =
         # t_ideal / parity_new.  Replay holds the accelerator itself fixed —
-        # a cross-profile replay re-prices crossings, not the silicon.
+        # a cross-profile replay re-prices crossings, not the silicon.  The
+        # record's `bound` picks WHICH parity factor: a memory-bound step
+        # scales by hbm_parity (B300: 0.912 — a real CC tax), a
+        # compute-bound one by compute_parity (0.998 — near-free);
+        # pre-boundness records fall back to compute_parity (conservative).
         rec_profile = PROFILES.get(self.tape.meta.profile)
-        parity_rec = (rec_profile.compute_parity
-                      if rec_profile is not None and self.tape.meta.cc_on
-                      else 1.0)
-        parity_new = model.profile.compute_parity if model.cc_on else 1.0
-        compute_scale = parity_rec / parity_new
+
+        def _parity(profile, cc_on: bool, bound: str) -> float:
+            if profile is None or not cc_on:
+                return 1.0
+            return (profile.hbm_parity if bound == "memory"
+                    else profile.compute_parity)
+
+        def compute_scale(bound: str) -> float:
+            return (_parity(rec_profile, self.tape.meta.cc_on, bound)
+                    / _parity(model.profile, model.cc_on, bound))
 
         per_class: dict[str, list[tuple[int, float, float]]] = {}
         wall = 0.0
@@ -236,7 +249,7 @@ class TraceReplayer:
         worker_mode = policy == SchedulingPolicy.WORKER_DRAIN.value
         for rc in stream:
             if rc.kind == "compute":
-                cost = rc.recorded_s * compute_scale
+                cost = rc.recorded_s * compute_scale(rc.bound)
             else:
                 crossing = Crossing(rc.nbytes, Direction(rc.direction),
                                     StagingKind(rc.staging))

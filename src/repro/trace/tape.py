@@ -64,6 +64,11 @@ class TapeRecord:
     #: interval kind: "crossing" (v1's only meaning) or "compute"
     #: (device-local prefill/decode work — DESIGN.md §7)
     kind: str = KIND_CROSSING
+    #: roofline boundness of a compute record ("compute" | "memory"; "" on
+    #: crossings and pre-boundness tapes).  Additive with default per the
+    #: §5 rules — replay uses it to pick the matching CC parity factor
+    #: (hbm_parity for memory-bound steps) instead of assuming compute-bound.
+    bound: str = ""
 
     @property
     def duration_s(self) -> float:
@@ -78,7 +83,7 @@ class TapeRecord:
         return cls(op_class=rec.op_class, direction=rec.direction,
                    nbytes=rec.nbytes, staging=rec.staging, channel=rec.channel,
                    t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged,
-                   tags=tuple(rec.tags), kind=rec.kind)
+                   tags=tuple(rec.tags), kind=rec.kind, bound=rec.bound)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -90,7 +95,8 @@ class TapeRecord:
                    channel=int(d["channel"]), t_start=float(d["t_start"]),
                    t_end=float(d["t_end"]), charged=bool(d.get("charged", True)),
                    tags=tuple(d.get("tags", ())),
-                   kind=d.get("kind", KIND_CROSSING))
+                   kind=d.get("kind", KIND_CROSSING),
+                   bound=d.get("bound", ""))
 
 
 @dataclass(frozen=True)
