@@ -1,0 +1,276 @@
+"""Bridge observatory benchmark: offered-load percentile curves + overhead.
+
+Two questions, one module (DESIGN.md §9):
+
+1. **What do the spans say under load?**  The classic serving curve — TTFT
+   and TPOT percentiles vs offered load — read entirely from the
+   observatory's request spans, on the virtual clock.  A closed-loop run
+   calibrates the workload's capacity (requests/s at full batch); the
+   open-loop sweep then offers 0.5x / 1.0x / 2.0x that rate with
+   deterministic arrivals and reads p50/p99 TTFT and TPOT out of the
+   metrics registry.  Everything on this path is virtual-clock arithmetic,
+   so the curves are bit-deterministic and checked into ``BENCH_obs.json``
+   (CI drift gate: ``python -m benchmarks.bench_obs --check BENCH_obs.json``).
+
+2. **What does watching cost?**  The observatory is passive on the virtual
+   clock by construction (it never advances it), so its only cost is host
+   wall time.  The same open-loop run is timed obs-on vs obs-off,
+   interleaved min-of-3 to shed scheduler noise; CI bounds the ratio at
+   1.10x.  The ratio is wall-clock and therefore NOT part of the drift
+   file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+from repro.core.bridge import B300, BridgeModel
+from repro.core.policy import cc_aware_defaults
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampler import SamplingParams
+from repro.trace.harness import smoke_model
+
+#: the fixed curve workload
+N_REQUESTS = 12
+MAX_NEW_TOKENS = 8
+MAX_BATCH = 4
+PROMPT = (1, 2, 3)
+
+#: offered load as multiples of the calibrated closed-loop capacity —
+#: under (queueing negligible), at, and over (queue growth dominates TTFT)
+LOAD_MULTIPLES = (0.5, 1.0, 2.0)
+
+#: CI guardrail: obs-on host wall time must stay within this factor of
+#: obs-off on the interleaved min-of-3 measurement
+OVERHEAD_LIMIT = 1.10
+
+#: relative tolerance for the BENCH_obs.json drift check (virtual-clock
+#: quantities are deterministic; this absorbs only float round-tripping)
+REL_TOL = 1e-9
+
+DRIFT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
+
+
+def _make_engine(model, *, observability: bool) -> ServingEngine:
+    bridge = BridgeModel(B300, cc_on=True)
+    defaults = dataclasses.replace(
+        cc_aware_defaults(True, concurrency=MAX_BATCH),
+        observability=observability)
+    engine = ServingEngine(
+        model, max_batch=MAX_BATCH, max_len=64,
+        policy=defaults.scheduling, bridge=bridge,
+        defaults=defaults, seed=0)
+    engine.gateway.pool.prewarm()
+    return engine
+
+
+def _request(i: int) -> Request:
+    return Request(f"r{i}", prompt=list(PROMPT),
+                   sampling=SamplingParams(max_new_tokens=MAX_NEW_TOKENS))
+
+
+def calibrate_capacity_rps(model) -> float:
+    """Closed-loop service rate: all requests queued up front, engine
+    drains at full batch — requests/s on the virtual clock."""
+    engine = _make_engine(model, observability=True)
+    try:
+        for i in range(N_REQUESTS):
+            engine.submit(_request(i))
+        engine.run()
+        makespan = engine.clock.now
+    finally:
+        engine.close()
+    return N_REQUESTS / max(makespan, 1e-12)
+
+
+def run_open_loop(model, rate_rps: float, *, observability: bool) -> dict:
+    """Arrival-driven run: deterministic arrivals at `rate_rps`, engine
+    stepped whenever it has work, virtual clock advanced to the next
+    arrival when idle.  Span enqueue times are re-stamped to the true
+    arrival (engine.submit stamps admission time; on_enqueue is
+    last-wins), so TTFT includes open-loop queueing delay."""
+    engine = _make_engine(model, observability=observability)
+    try:
+        arrivals = [i / rate_rps for i in range(N_REQUESTS)]
+        next_i = 0
+        while next_i < len(arrivals) or engine.queue or engine.active:
+            while (next_i < len(arrivals)
+                   and engine.clock.now >= arrivals[next_i] - 1e-12):
+                req = _request(next_i)
+                engine.submit(req)
+                req.enqueue_t = arrivals[next_i]
+                if engine.obs is not None:
+                    engine.obs.spans.on_enqueue(req.request_id,
+                                                arrivals[next_i])
+                next_i += 1
+            if not engine.queue and not engine.active:
+                # idle gap between arrivals: nothing to overlap, jump
+                engine.clock.advance_to(arrivals[next_i])
+                continue
+            engine.step()
+        out = {
+            "finished": len(engine.finished),
+            "makespan_s": engine.clock.now,
+        }
+        if engine.obs is not None:
+            reg = engine.obs.registry
+            for fam, key in (("req/ttft_s", "ttft"), ("req/tpot_s", "tpot")):
+                for p in (50.0, 99.0):
+                    out[f"{key}_p{int(p)}_s"] = reg.family_percentile(
+                        fam, p, default=0.0)
+            out["queue_wait_p99_s"] = reg.family_percentile(
+                "req/queue_wait_s", 99.0, default=0.0)
+        return out
+    finally:
+        engine.close()
+
+
+def offered_load_curves(model) -> dict:
+    """The deterministic drift payload: capacity + one curve point per
+    offered-load multiple, all virtual-clock quantities."""
+    capacity = calibrate_capacity_rps(model)
+    curves = []
+    for mult in LOAD_MULTIPLES:
+        rate = mult * capacity
+        point = run_open_loop(model, rate, observability=True)
+        curves.append({
+            "multiple": mult,
+            "offered_rps": rate,
+            "finished": point["finished"],
+            "makespan_s": point["makespan_s"],
+            "ttft_p50_s": point["ttft_p50_s"],
+            "ttft_p99_s": point["ttft_p99_s"],
+            "tpot_p50_s": point["tpot_p50_s"],
+            "tpot_p99_s": point["tpot_p99_s"],
+            "queue_wait_p99_s": point["queue_wait_p99_s"],
+        })
+    return {"capacity_rps": capacity, "curves": curves}
+
+
+def measure_overhead_ratio(model, rate_rps: float, *,
+                           rounds: int = 3) -> float:
+    """Host wall time ratio of the identical open-loop run, obs-on vs
+    obs-off.  Interleaved min-of-N: each round times one off leg then one
+    on leg back-to-back, and the ratio compares the per-leg minima — the
+    standard way to read a small constant factor through OS noise."""
+    def wall(observability: bool) -> float:
+        t0 = time.perf_counter()
+        run_open_loop(model, rate_rps, observability=observability)
+        return time.perf_counter() - t0
+
+    # warm both paths once (imports, allocator) before timing
+    wall(False), wall(True)
+    ons, offs = [], []
+    for _ in range(rounds):
+        offs.append(wall(False))
+        ons.append(wall(True))
+    return min(ons) / max(min(offs), 1e-9)
+
+
+def run() -> list[str]:
+    model = smoke_model()
+    payload = offered_load_curves(model)
+    lines = [
+        f"obs/capacity_rps,{payload['capacity_rps']:.6f},"
+        f"closed-loop service rate (virtual clock), {N_REQUESTS} reqs x "
+        f"{MAX_NEW_TOKENS} tokens at batch {MAX_BATCH}",
+    ]
+    for c in payload["curves"]:
+        tag = f"load{c['multiple']:g}x"
+        lines.append(
+            f"obs/{tag}_ttft_p50_s,{c['ttft_p50_s']:.6f},"
+            f"offered {c['offered_rps']:.3f} req/s "
+            f"(p99={c['ttft_p99_s']:.6f}s, from request spans)")
+        lines.append(
+            f"obs/{tag}_ttft_p99_s,{c['ttft_p99_s']:.6f},"
+            f"queue_wait_p99={c['queue_wait_p99_s']:.6f}s")
+        lines.append(
+            f"obs/{tag}_tpot_p50_s,{c['tpot_p50_s']:.6f},"
+            f"per-token gaps from span token times "
+            f"(p99={c['tpot_p99_s']:.6f}s)")
+    # overload must cost TTFT: the 2x point's p99 TTFT strictly above 0.5x
+    lo = payload["curves"][0]["ttft_p99_s"]
+    hi = payload["curves"][-1]["ttft_p99_s"]
+    lines.append(
+        f"obs/overload_raises_ttft,{float(hi > lo):.1f},"
+        f"p99 TTFT {lo:.6f}s @0.5x -> {hi:.6f}s @2x (queueing visible "
+        f"in spans)")
+    ratio = measure_overhead_ratio(
+        model, payload["capacity_rps"] * LOAD_MULTIPLES[-1])
+    lines.append(
+        f"obs/overhead_ratio,{ratio:.4f},"
+        f"obs-on / obs-off host wall time, interleaved min-of-3 "
+        f"(CI bound {OVERHEAD_LIMIT}x; wall-clock, not in drift file)")
+    return lines
+
+
+# ---------------------------------------------------------------------------------
+# BENCH_obs.json drift gate
+# ---------------------------------------------------------------------------------
+
+
+def _close(a: float, b: float) -> bool:
+    return abs(a - b) <= REL_TOL * max(abs(a), abs(b), 1e-30)
+
+
+def check_drift(path: str) -> list[str]:
+    """Recompute the deterministic payload and diff it against `path`."""
+    with open(path) as f:
+        golden = json.load(f)
+    fresh = offered_load_curves(smoke_model())
+    problems = []
+    if not _close(fresh["capacity_rps"], golden.get("capacity_rps", -1.0)):
+        problems.append(f"capacity_rps {golden.get('capacity_rps')!r} -> "
+                        f"{fresh['capacity_rps']!r}")
+    gold_curves = golden.get("curves", [])
+    if len(gold_curves) != len(fresh["curves"]):
+        problems.append(f"curve count {len(gold_curves)} -> "
+                        f"{len(fresh['curves'])}")
+        return problems
+    for g, f_ in zip(gold_curves, fresh["curves"]):
+        for key, val in f_.items():
+            gv = g.get(key)
+            ok = (_close(val, gv) if isinstance(val, float)
+                  else val == gv)
+            if not ok:
+                problems.append(
+                    f"load {f_['multiple']}x {key}: {gv!r} -> {val!r}")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--write", metavar="PATH", nargs="?",
+                    const=DRIFT_PATH, default=None,
+                    help="write the deterministic curve payload as JSON")
+    ap.add_argument("--check", metavar="PATH", nargs="?",
+                    const=DRIFT_PATH, default=None,
+                    help="verify PATH against a fresh recomputation")
+    args = ap.parse_args()
+    if args.check:
+        problems = check_drift(args.check)
+        if problems:
+            print("BENCH_obs.json is stale — regenerate with "
+                  "`python -m benchmarks.bench_obs --write` and review:")
+            for p in problems:
+                print(f"  {p}")
+            sys.exit(1)
+        print(f"{os.path.basename(args.check)}: OK")
+        return
+    if args.write:
+        payload = offered_load_curves(smoke_model())
+        with open(args.write, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.write}")
+        return
+    print("\n".join(run()))
+
+
+if __name__ == "__main__":
+    main()

@@ -237,8 +237,14 @@ class CrossingCoalescer:
                 continue
             total = sum(p.nbytes for p in q)
             n = len(q)
+            # v3 provenance: the fused record re-lists its constituents so
+            # attribution/replay can un-fuse it, and names the trigger that
+            # fired — the stall attributor prices deadline flushes as
+            # coalescer-injected latency, not useful batching
+            sources = tuple((p.op_class, p.nbytes) for p in q)
             q.clear()
             staging, tags = self._flush_staging(d)
+            tags = tags + (f"flush_{trigger}",)
             if self.worker_flush and d is Direction.D2H:
                 # composition (ROADMAP "worker drain x coalescer"): the
                 # worker thread owns the fused drain — it serializes on a
@@ -247,7 +253,7 @@ class CrossingCoalescer:
                 # d2h() time, so nothing downstream waits on the flush.
                 self.gateway.pooled_crossing(
                     Crossing(total, d, staging),
-                    op_class=self.OP_CLASS[d], tags=tags)
+                    op_class=self.OP_CLASS[d], tags=tags, sources=sources)
                 self.gateway.clock.advance(self.worker_handoff_s)
                 self.stats.worker_flushes += 1
                 self.stats.worker_handoff_s += self.worker_handoff_s
@@ -255,7 +261,7 @@ class CrossingCoalescer:
             else:
                 charged += self.gateway.charge_crossing(
                     total, d, staging=staging, op_class=self.OP_CLASS[d],
-                    tags=tags)
+                    tags=tags, sources=sources)
             self.stats.fused_crossings += n
             self.stats.fused_bytes += total
             self.stats.flushes[trigger] = self.stats.flushes.get(trigger, 0) + 1

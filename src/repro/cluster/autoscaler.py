@@ -43,9 +43,15 @@ class AutoscalerConfig:
 
 class Autoscaler:
     def __init__(self, budget: SecureContextBudget,
-                 cfg: Optional[AutoscalerConfig] = None):
+                 cfg: Optional[AutoscalerConfig] = None, *,
+                 registry=None):
         self.budget = budget
         self.cfg = cfg or AutoscalerConfig()
+        #: optional repro.obs.MetricsRegistry: each evaluate() records its
+        #: decision (counter, labeled by outcome) and the signals it read
+        #: (gauges), so fleet dashboards see *why* the scaler held —
+        #: BRIDGE_BOUND with bridge_fraction pinned high is the §4 L4 story
+        self.registry = registry
         self.decisions: list[dict] = []
 
     def evaluate(self, metrics: list[ReplicaMetrics]) -> dict:
@@ -84,4 +90,13 @@ class Autoscaler:
             "budget_available": self.budget.available(),
         }
         self.decisions.append(out)
+        if self.registry is not None:
+            self.registry.counter("autoscaler/decisions",
+                                  decision=decision.value).inc()
+            self.registry.gauge("autoscaler/bridge_fraction").set(
+                bridge_fraction)
+            self.registry.gauge("autoscaler/mean_queue_delay_s").set(
+                mean_delay)
+            self.registry.gauge("autoscaler/target_replicas").set(
+                float(target))
         return out

@@ -31,6 +31,7 @@ import dataclasses
 
 from repro.bridge_opt import StagingArena
 from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
+from repro.obs import Observatory
 from repro.core.channels import VirtualClock
 from repro.core.fabric import Tenant
 from repro.core.gateway import TransferGateway
@@ -122,6 +123,11 @@ class ReplicaMetrics:
     #: overlap-aware routing signal (1.0 when no barriers resolved yet —
     #: an untested replica is neutral, not maximally cold)
     overlap_noop_share: float = 1.0
+    #: same signal over the last DEFAULT_BARRIER_WINDOW barriers only —
+    #: *current* warmth rather than lifetime history (a replica warm an
+    #: hour of virtual time ago no longer looks warm); same neutral 1.0
+    #: before any barrier enters the window
+    overlap_noop_share_windowed: float = 1.0
 
 
 class Replica:
@@ -168,10 +174,16 @@ class Replica:
             label=f"replica-{replica_id}",
             extra={"tenant": tenant.tenant_id,
                    "leased_contexts": lease.n_contexts}).attach()
+        #: replica-labeled observatory: every metric/span it emits carries
+        #: (replica, tenant) labels so cluster-merged snapshots stay
+        #: attributable.  None when observability is off (REPRO_OBS=0).
+        self.obs: Optional[Observatory] = (
+            Observatory(replica=replica_id, tenant=tenant.tenant_id)
+            if defaults.observability else None)
         self.engine = ServingEngine(
             model, max_batch=self.cfg.max_batch, max_len=self.cfg.max_len,
             gateway=self.gateway, policy=defaults.scheduling, bridge=bridge,
-            defaults=defaults, seed=seed)
+            defaults=defaults, seed=seed, obs=self.obs)
         self.scheduler = Scheduler(self.engine, SchedulerConfig())
         self.offload = OffloadManager(
             self.gateway, defaults.offload,
@@ -180,7 +192,8 @@ class Replica:
             block_bytes=self.cfg.block_bytes,
             coalescer=self.engine.coalescer,
             pipelined_restore=defaults.pipelined_restore,
-            restore_chunk_bytes=self.cfg.effective_restore_chunk_bytes)
+            restore_chunk_bytes=self.cfg.effective_restore_chunk_bytes,
+            obs=self.obs)
         # restore completions flow to the engine's slot-granular read sets
         # (OverlapScheduler) through the offload layer's own callback — the
         # admission path no longer hand-plumbs done_t per call site
@@ -240,6 +253,11 @@ class Replica:
         self.scheduler.submit(req)
         # TTFT window starts at arrival, before the admission-path charges
         req.enqueue_t = t0
+        if self.obs is not None:
+            # the engine's submit stamped the span with post-admission time;
+            # re-stamp with the true arrival (on_enqueue is last-wins) so
+            # span TTFT/queue-wait match the request fields above
+            self.obs.spans.on_enqueue(req.request_id, t0)
         self._track_pages(req, blocks, hashes)
         return True
 
@@ -334,9 +352,30 @@ class Replica:
             return 1.0
         return ov.barrier_noops / resolved
 
+    def overlap_noop_share_windowed(self) -> float:
+        """`overlap_noop_share` over the scheduler's recent-barrier window
+        only (last DEFAULT_BARRIER_WINDOW outcomes) — the *current* warmth
+        signal routers should prefer: a replica that stopped hiding restore
+        drains shows up within ~one wave of requests instead of being
+        flattered by lifetime history.  Neutral 1.0 while the window is
+        empty, matching the lifetime share's untested-replica semantics."""
+        overlap = self.engine.overlap
+        if not overlap.recent_barriers:
+            return 1.0
+        return overlap.windowed_noop_share()
+
     def metrics(self) -> ReplicaMetrics:
         per_op = self.tape().op_class_seconds()
         ov = self.engine.overlap.stats
+        if self.obs is not None:
+            # raw + windowed noop shares as gauges: snapshot-time values in
+            # the same registry the crossing counters live in, so a merged
+            # cluster snapshot carries the routing signal per replica
+            self.obs.registry.gauge("replica/overlap_noop_share").set(
+                self.overlap_noop_share())
+            self.obs.registry.gauge(
+                "replica/overlap_noop_share_windowed").set(
+                    self.overlap_noop_share_windowed())
         return ReplicaMetrics(
             replica_id=self.replica_id,
             queued=len(self.engine.queue),
@@ -350,6 +389,7 @@ class Replica:
             deferred_slots=ov.deferred_slots,
             barrier_noops=ov.barrier_noops,
             overlap_noop_share=self.overlap_noop_share(),
+            overlap_noop_share_windowed=self.overlap_noop_share_windowed(),
         )
 
     def stats(self) -> dict:
@@ -366,5 +406,8 @@ class Replica:
             # staging economics: the cluster-level inventory of what the
             # persistent arena bought this replica (bridge_opt)
             arena=(self.arena.stats_dict() if self.arena is not None else None),
+            # unified telemetry (DESIGN.md §9): metric rows + request spans,
+            # labeled (replica, tenant); None when REPRO_OBS=0
+            obs=(self.obs.snapshot() if self.obs is not None else None),
         )
         return s

@@ -29,6 +29,7 @@ import enum
 from typing import Optional
 
 from repro.core.bridge import TPU_V5E, BridgeModel, BridgeProfile
+from repro.obs import Observatory
 from repro.serving.engine import Request
 
 from .budget import PinnedBudget, SecureContextBudget
@@ -105,7 +106,18 @@ class ClusterRouter:
         return replica, False, warm
 
     def _overlap_share(self, replica) -> float:
-        """Barrier-noop share of a replica (1.0 when it exports none)."""
+        """Barrier-noop share of a replica (1.0 when it exports none).
+
+        Prefers the *windowed* share (last DEFAULT_BARRIER_WINDOW barrier
+        outcomes) when the replica exports one: routing reacts to current
+        warmth, not lifetime history — a replica that stopped hiding
+        restore drains loses its preference within one window instead of
+        coasting on an hour-old record.  Falls back to the lifetime share,
+        then to a neutral 1.0.
+        """
+        windowed = getattr(replica, "overlap_noop_share_windowed", None)
+        if callable(windowed):
+            return float(windowed())
         share = getattr(replica, "overlap_noop_share", None)
         return float(share()) if callable(share) else 1.0
 
@@ -169,6 +181,14 @@ class ClusterRouter:
         total_tokens = sum(s["total_tokens"] for s in per_replica)
         iso = (self.tenant_manager.isolation_report()
                if self.tenant_manager is not None else None)
+        # fleet-merged telemetry: per-replica registries merge losslessly
+        # (counters add, histogram samples pool) because every series
+        # carries (replica, tenant) labels — percentiles in the merged
+        # snapshot are exact over the pooled samples, not averaged p99s
+        observatories = [r.obs for r in self.replicas
+                         if getattr(r, "obs", None) is not None]
+        merged_obs = (Observatory.merge(observatories).snapshot()
+                      if observatories else None)
         return {
             "routing": self.routing.value,
             "n_replicas": len(self.replicas),
@@ -183,6 +203,7 @@ class ClusterRouter:
                                         for s in per_replica),
             "leased_contexts": [s["leased_contexts"] for s in per_replica],
             "isolation": iso,
+            "obs": merged_obs,
             "replicas": per_replica,
         }
 

@@ -50,6 +50,11 @@ class CopyRecord:
     #: "" = unknown/crossing) — lets replay re-price at the matching parity
     #: factor instead of conservatively assuming compute-bound
     bound: str = ""
+    #: constituent crossings fused into this one, as (op_class, nbytes)
+    #: pairs — set by the coalescer so a fused flush stays un-fusable
+    #: counterfactually (stall attribution, replay).  Empty for ordinary
+    #: crossings; additive with default, so hand-built records stay valid.
+    sources: tuple = ()
 
 
 @dataclass

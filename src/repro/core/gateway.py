@@ -190,7 +190,8 @@ class TransferGateway:
         return out
 
     def pooled_crossing(self, crossing: Crossing, *, op_class: str,
-                        tags: tuple = ()) -> tuple[int, float, float]:
+                        tags: tuple = (),
+                        sources: tuple = ()) -> tuple[int, float, float]:
         """Submit one crossing to the channel pool, recorded *uncharged*.
 
         Returns ``(ctx_id, start, done)``.  The caller owns the
@@ -201,12 +202,13 @@ class TransferGateway:
         """
         ctx_id, start, done = self.pool.submit_ex(crossing)
         self._record(crossing, done - start, op_class, charge=False,
-                     channel=ctx_id, t_end=done, tags=tags)
+                     channel=ctx_id, t_end=done, tags=tags, sources=sources)
         return ctx_id, start, done
 
     def charge_crossing(self, nbytes: int, direction: Direction, *,
                         staging: StagingKind = StagingKind.REGISTERED,
-                        op_class: str, tags: tuple = ()) -> float:
+                        op_class: str, tags: tuple = (),
+                        sources: tuple = ()) -> float:
         """Price + record a metadata-only crossing (no tensor moves).
 
         Call sites that account a crossing without materializing its payload
@@ -218,7 +220,8 @@ class TransferGateway:
         crossing = Crossing(int(nbytes), direction, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end, tags=tags)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags,
+                     sources=sources)
         return cost
 
     def record_modeled(self, nbytes: int, direction: Direction, cost: float, *,
@@ -272,7 +275,8 @@ class TransferGateway:
 
     def _record(self, crossing: Crossing, cost: float, op_class: str, *,
                 charge: bool = True, channel: int = -1,
-                t_end: Optional[float] = None, tags: tuple = ()) -> None:
+                t_end: Optional[float] = None, tags: tuple = (),
+                sources: tuple = ()) -> None:
         """`charge=False` keeps the per-crossing duration in the records (for
         op-class attribution) without adding it to bridge_time_s — used when
         the wall-clock charge is accounted elsewhere (pooled drain).
@@ -294,7 +298,7 @@ class TransferGateway:
             op_class, crossing.nbytes, cost, self.bridge.cc_on,
             direction=crossing.direction.value, staging=crossing.staging.value,
             channel=channel, t_start=end - cost, t_end=end, charged=charge,
-            tags=tuple(tags))
+            tags=tuple(tags), sources=tuple(sources))
         self.records.append(rec)
         for hook in self.on_record:
             hook(rec)

@@ -54,6 +54,14 @@ def overlap_scheduler_default() -> bool:
     return os.environ.get("REPRO_OVERLAP_SCHEDULER", "1") != "0"
 
 
+def observability_default() -> bool:
+    """REPRO_OBS=0 disables observatory creation fleet-wide (the obs layer
+    is passive — it never moves the virtual clock — so this is purely a
+    host-overhead lever; bench_obs measures the on/off ratio and CI bounds
+    it at 1.10x)."""
+    return os.environ.get("REPRO_OBS", "1") != "0"
+
+
 @dataclass(frozen=True)
 class RuntimeDefaults:
     """Policy defaults the runtime should select for a given CC mode."""
@@ -92,6 +100,11 @@ class RuntimeDefaults:
     #: pending restore the masked path is byte-identical to the fused batch
     #: step, which is what keeps the golden tapes stable with the flag on.
     slot_masked_decode: bool = True
+    # ---- observability (DESIGN.md §9) ------------------------------------------
+    #: create a repro.obs.Observatory for engines/replicas that are not
+    #: handed one explicitly (metrics registry + request spans wired into
+    #: the gateway's record stream).  Passive: never touches the clock.
+    observability: bool = field(default_factory=observability_default)
 
 
 def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,

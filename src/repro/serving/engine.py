@@ -40,6 +40,7 @@ from repro.core.channels import VirtualClock
 from repro.core.compute import ComputeModel
 from repro.core.gateway import TransferGateway
 from repro.core.policy import RuntimeDefaults, SchedulingPolicy, cc_aware_defaults
+from repro.obs import Observatory
 from repro.trace import opclasses as oc
 from repro.models.model import Model
 from .overlap import OverlapScheduler
@@ -91,6 +92,7 @@ class ServingEngine:
                  bridge: Optional[BridgeModel] = None,
                  defaults: Optional[RuntimeDefaults] = None,
                  compute_model: Optional[ComputeModel] = None,
+                 obs: Optional[Observatory] = None,
                  seed: int = 0):
         from repro.core.bridge import TPU_V5E
         self.model = model
@@ -129,6 +131,15 @@ class ServingEngine:
         self.overlap = OverlapScheduler(
             self.clock, self.gateway.pool,
             prefer_overlap=self.defaults.overlap_scheduler)
+        #: observatory (DESIGN.md §9): metric registry + request spans, fed
+        #: from the gateway's record stream and the lifecycle points below.
+        #: Passive — it never reads or moves the clock, so tapes and token
+        #: streams are identical with it on or off.  A caller-owned bundle
+        #: (the cluster Replica passes its labeled one) wins over defaults.
+        self.obs = obs if obs is not None else (
+            Observatory() if self.defaults.observability else None)
+        if self.obs is not None:
+            self.obs.attach_gateway(self.gateway)
 
         self.params = model.init(jax.random.PRNGKey(seed))
         self.caches = model.init_cache(max_batch, max_len)
@@ -184,6 +195,10 @@ class ServingEngine:
         request.enqueue_t = self.clock.now
         request.state = "queued"
         self.queue.append(request)
+        if self.obs is not None:
+            # last-wins: an admission layer that knows the true arrival
+            # time (cluster Replica) re-stamps the span after this
+            self.obs.spans.on_enqueue(request.request_id, request.enqueue_t)
 
     def mark_restore(self, request_id: str, done_t: float) -> None:
         """Register that `request_id`'s KV restore lands at virtual `done_t`
@@ -232,9 +247,15 @@ class ServingEngine:
             admitted = True
 
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
+        if self.obs is not None:
+            self.obs.spans.on_admit(req.request_id, self.clock.now)
         # first read of restored KV happens here: the barrier is the law
-        if self.overlap.restore_barrier(req.request_id) and self.coalescer is not None:
-            self.coalescer.poll()   # the barrier wait moved the clock
+        waited = self.overlap.restore_barrier(req.request_id)
+        if waited:
+            if self.coalescer is not None:
+                self.coalescer.poll()   # the barrier wait moved the clock
+            if self.obs is not None:
+                self.obs.spans.on_restore_wait(req.request_id, waited)
         prompt = np.asarray(req.prompt, np.int32)[None]     # (1, P)
         # prompt upload crosses the bridge (registered: steady-state serving
         # reuses the prompt staging buffer; coalesced when bridge_opt is on)
@@ -266,6 +287,8 @@ class ServingEngine:
         tok = int(first_host[0])
         req.output_tokens.append(tok)
         req.first_token_t = self.clock.now
+        if self.obs is not None:
+            self.obs.spans.on_token(req.request_id, req.first_token_t)
         req.state = "running"
         req.slot = slot
         req.index = idx0
@@ -301,10 +324,14 @@ class ServingEngine:
         if state == "finished":
             req.finish_t = self.clock.now
             self.finished.append(req)
+            if self.obs is not None:
+                self.obs.spans.on_finish(req.request_id, req.finish_t)
         else:
             req.restarts += 1
             req.output_tokens.clear()
             self.queue.append(req)
+            if self.obs is not None:
+                self.obs.spans.on_preempt(req.request_id, self.clock.now)
 
     # -- the decode step under each policy ------------------------------------------------
 
@@ -333,9 +360,12 @@ class ServingEngine:
             # pipeline's barrier, then re-ask (others may have landed too)
             nearest = min(
                 deferred, key=lambda s: self.overlap.pending_done_t(key_of[s]))
-            if self.overlap.restore_barrier(key_of[nearest]) \
-                    and self.coalescer is not None:
-                self.coalescer.poll()   # the barrier wait moved the clock
+            waited = self.overlap.restore_barrier(key_of[nearest])
+            if waited:
+                if self.coalescer is not None:
+                    self.coalescer.poll()   # the barrier wait moved the clock
+                if self.obs is not None:
+                    self.obs.spans.on_restore_wait(key_of[nearest], waited)
             mask = self.overlap.ready_mask(key_of)
             ready = [s for s in slots if mask[s]]
             deferred = [s for s in slots if not mask[s]]
@@ -403,8 +433,13 @@ class ServingEngine:
         # restores (and deferred the rest), so this whole-batch barrier is
         # the legacy flag-off path.
         if not self.defaults.slot_masked_decode and self.overlap.pending:
-            waited = sum(self.overlap.restore_barrier(self.active[s].request_id)
-                         for s in slots)
+            waited = 0.0
+            for s in slots:
+                w = self.overlap.restore_barrier(self.active[s].request_id)
+                if w and self.obs is not None:
+                    self.obs.spans.on_restore_wait(
+                        self.active[s].request_id, w)
+                waited += w
             if waited and self.coalescer is not None:
                 self.coalescer.poll()   # the barrier wait moved the clock
 
@@ -478,6 +513,8 @@ class ServingEngine:
             req = self.active[s]
             tok = int(host[pos] if deferred else host[s])
             req.output_tokens.append(tok)
+            if self.obs is not None:
+                self.obs.spans.on_token(req.request_id, self.clock.now)
             req.index += 1
             req.decode_steps += 1
             sp = req.sampling

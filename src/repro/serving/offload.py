@@ -58,11 +58,15 @@ class OffloadManager:
                  *, store_threshold: int = 2, block_bytes: int = 0,
                  coalescer: Optional[CrossingCoalescer] = None,
                  pipelined_restore: bool = False,
-                 restore_chunk_bytes: int = 256 << 10):
+                 restore_chunk_bytes: int = 256 << 10,
+                 obs=None):
         self.gateway = gateway
         self.policy = policy
         self.store_threshold = store_threshold
         self.block_bytes = block_bytes
+        #: optional repro.obs.Observatory — spill/restore volumes and restore
+        #: landing latencies land in its registry when attached
+        self.obs = obs
         #: bridge_opt: metadata-only spills join the fused flush when present
         self.coalescer = coalescer
         #: bridge_opt: chunk + double-buffer restores over the channel pool
@@ -76,7 +80,14 @@ class OffloadManager:
         #: clock.now for blocking restores, the pipeline's completion for
         #: pipelined ones.  Callers feed it to the engine's restore barrier
         #: (ServingEngine.mark_restore) so first use blocks correctly.
+        #: Legacy single-slot view; concurrent keyed restores must read
+        #: ``restore_done_t[key]`` instead — one shared done time skews the
+        #: ready_mask rejoin order when pipelines for different requests
+        #: are in flight together.
         self.last_restore_done_t: float = 0.0
+        #: per-key pipeline completion: request key -> virtual time ITS
+        #: restore fully lands (only keyed restores are tracked)
+        self.restore_done_t: dict[str, float] = {}
         #: per-request restore-completion subscribers ``(key, done_t)``:
         #: `restore(..., key=...)` notifies each the moment a restore's
         #: landing time is known, so the scheduler's slot-granular read sets
@@ -136,6 +147,9 @@ class OffloadManager:
             token_hash, nbytes, self.seen_counts.get(token_hash, 0), payload)
         self.stats.spilled_blocks += 1
         self.stats.spilled_bytes += nbytes
+        if self.obs is not None:
+            self.obs.registry.counter("offload/spilled_blocks").inc()
+            self.obs.registry.counter("offload/spilled_bytes").inc(nbytes)
         return True
 
     # -- restore -------------------------------------------------------------------------
@@ -157,7 +171,7 @@ class OffloadManager:
         self.stats.restore_hits += len(hits)
         self.stats.restore_misses += misses
         total = sum(b.payload_bytes for b in hits)
-        self.last_restore_done_t = self.gateway.clock.now
+        done_t = self.gateway.clock.now
         if hits:
             payloads = [b.payload if b.payload is not None
                         else np.zeros(b.payload_bytes, np.uint8) for b in hits]
@@ -168,16 +182,30 @@ class OffloadManager:
                 self.stats.pipelined_restores += 1
                 self.stats.restore_fill_s += result.fill_s
                 self.stats.restore_overlap_s += result.overlap_s
-                self.last_restore_done_t = result.done_t
+                done_t = result.done_t
             else:
                 self.gateway.bulk_h2d_pooled(payloads,
                                              op_class=oc.KV_RESTORE_H2D)
-                self.last_restore_done_t = self.gateway.clock.now
+                done_t = self.gateway.clock.now
             self.stats.restored_blocks += len(hits)
             self.stats.restored_bytes += total
             if key is not None:
+                # per-key completion: concurrent keyed restores each keep
+                # their own landing time (a later pipeline for request B
+                # must not push request A's rejoin later, nor hide behind
+                # an earlier one)
+                self.restore_done_t[key] = max(
+                    done_t, self.restore_done_t.get(key, 0.0))
                 for cb in self.on_restore_done:
-                    cb(key, self.last_restore_done_t)
+                    cb(key, done_t)
+            if self.obs is not None:
+                self.obs.registry.counter("offload/restores").inc()
+                self.obs.registry.histogram(
+                    "offload/restore_bytes").observe(total)
+                self.obs.registry.histogram(
+                    "offload/restore_inflight_s").observe(
+                        max(0.0, done_t - self.gateway.clock.now))
+        self.last_restore_done_t = done_t
         return len(hits), total
 
 

@@ -35,6 +35,7 @@ hidden) and ``barrier_waits`` (window paid idle).
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Mapping, Optional
 
@@ -42,6 +43,10 @@ from repro.core.channels import SecureChannelPool, VirtualClock
 
 #: slack under which a pending restore counts as already landed
 EPS = 1e-12
+
+#: default window (barrier outcomes) for the windowed no-op share — small
+#: enough that a replica going cold shows up within ~one wave of requests
+DEFAULT_BARRIER_WINDOW = 64
 
 
 @dataclass
@@ -69,7 +74,8 @@ class OverlapScheduler:
     """Tracks in-flight restores and arbitrates admission around them."""
 
     def __init__(self, clock: VirtualClock, pool: SecureChannelPool, *,
-                 prefer_overlap: bool = True):
+                 prefer_overlap: bool = True,
+                 barrier_window: int = DEFAULT_BARRIER_WINDOW):
         self.clock = clock
         self.pool = pool
         self.prefer_overlap = prefer_overlap
@@ -78,6 +84,10 @@ class OverlapScheduler:
         #: keys already counted in stats.deferred_admissions for the
         #: currently-pending restore (cleared when the restore resolves)
         self._deferred_keys: set = set()
+        #: last `barrier_window` barrier outcomes (True = no-op, the overlap
+        #: win) — the windowed counterpart to the lifetime noop counters, so
+        #: routers track *current* rather than historical warmth
+        self.recent_barriers: deque = deque(maxlen=max(1, int(barrier_window)))
         self.stats = OverlapStats()
 
     # -- bookkeeping -------------------------------------------------------------------
@@ -177,9 +187,23 @@ class OverlapScheduler:
             self.clock.advance_to(done_t)
             self.stats.barrier_waits += 1
             self.stats.barrier_wait_s += waited
+            self.recent_barriers.append(False)
             return waited
         self.stats.barrier_noops += 1
+        self.recent_barriers.append(True)
         return 0.0
+
+    def windowed_noop_share(self) -> float:
+        """No-op share over the last ``barrier_window`` barriers only.
+
+        The lifetime share (barrier_noops / barriers) is dominated by
+        history — a replica that was warm an hour ago still looks warm.
+        Routers preferring overlap-filled replicas should read this one.
+        Returns 0.0 before any barrier resolves, like the lifetime share.
+        """
+        if not self.recent_barriers:
+            return 0.0
+        return sum(self.recent_barriers) / len(self.recent_barriers)
 
     # -- export ------------------------------------------------------------------------
 
@@ -194,4 +218,5 @@ class OverlapScheduler:
             "restores_noted": self.stats.restores_noted,
             "outstanding": self.outstanding(),
             "prefer_overlap": self.prefer_overlap,
+            "windowed_noop_share": self.windowed_noop_share(),
         }

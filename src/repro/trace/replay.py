@@ -83,8 +83,12 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
     sync/worker: runs of consecutive per-step prep uploads coalesce into one
     registered batched crossing (§8 rule 1); drains are renamed to the
     discipline's drain class.  async: prep crossings take fresh staging (the
-    44x class) — byte splits of previously-batched crossings are unknowable
-    from the tape, so an async rewrite re-stages without un-batching.
+    44x class).  A v3 coalesced record carries its constituent crossings in
+    ``sources``, so an async rewrite *un-fuses* it — each constituent is
+    re-priced as its own fresh-staged upload (or non-blocking drain), with
+    the recorded time prorated by bytes.  Pre-v3 coalesced records (no
+    sources) re-stage without un-batching, as before — byte splits are
+    unknowable from the fused record alone.
     """
     out: list[RewrittenCrossing] = []
     batch: list[TapeRecord] = []
@@ -123,6 +127,25 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
             out.append(RewrittenCrossing(op, r.direction, r.nbytes, r.staging,
                                          r.duration_s))
         elif policy == SchedulingPolicy.ASYNC_OVERLAP.value:
+            coalesced = r.op_class in (oc.COALESCED_H2D, oc.COALESCED_D2H)
+            if coalesced and r.sources:
+                # v3: un-fuse the flush into its constituents — async would
+                # have issued each one eagerly.  H2D constituents become the
+                # per-call fresh-staged 44x class; D2H become "non-blocking"
+                # drains.  Recorded time prorates by bytes (equal split when
+                # every constituent is zero-byte metadata).
+                total = sum(nb for _, nb in r.sources)
+                for _, nb in r.sources:
+                    share = (nb / total if total > 0
+                             else 1.0 / len(r.sources))
+                    if r.direction == Direction.H2D.value:
+                        op, staging = oc.ALLOC_H2D, StagingKind.FRESH.value
+                    else:
+                        op, staging = oc.DRAIN_D2H_NONBLOCKING, r.staging
+                    out.append(RewrittenCrossing(
+                        op, r.direction, nb, staging,
+                        r.duration_s * share))
+                continue
             op, staging = r.op_class, r.staging
             if r.op_class in oc.PREP_CLASSES and r.direction == Direction.H2D.value:
                 op, staging = oc.ALLOC_H2D, StagingKind.FRESH.value

@@ -23,6 +23,15 @@ nbytes 0).  v1 tapes parse unchanged (every record defaults to
 ``crossing``), so this reader accepts v1 *and* v2; the writer stamps v2
 because a stream containing compute records must not be consumed by a
 v1-only reader that would misprice them as crossings.
+
+v3 (DESIGN.md §9): coalesced records carry an additive ``sources`` field —
+the (op_class, nbytes) pairs of the constituent crossings fused into one
+flush — so the stall attributor and ``TraceReplayer`` can un-fuse a
+coalesced stream counterfactually.  Defaults to empty; v1/v2 tapes parse
+unchanged, so this reader accepts v1-v3.  The writer stamps v3 because a
+stream whose byte totals double-count fused constituents (record.nbytes is
+the fused total; sources re-lists the parts) must not be summed by a
+reader unaware of the distinction.
 """
 
 from __future__ import annotations
@@ -33,9 +42,10 @@ from typing import Iterable, Optional
 
 from repro.core.accounting import CopyRecord
 
-TAPE_FORMAT = "bridge-tape/v2"
-#: major versions this reader speaks (v1 = crossings only; v2 adds compute)
-READABLE_VERSIONS = (1, 2)
+TAPE_FORMAT = "bridge-tape/v3"
+#: major versions this reader speaks (v1 = crossings only; v2 adds compute
+#: records; v3 adds coalesced-record sources)
+READABLE_VERSIONS = (1, 2, 3)
 
 #: record kinds
 KIND_CROSSING = "crossing"
@@ -69,6 +79,11 @@ class TapeRecord:
     #: §5 rules — replay uses it to pick the matching CC parity factor
     #: (hbm_parity for memory-bound steps) instead of assuming compute-bound.
     bound: str = ""
+    #: v3: constituent crossings fused into this record, as (op_class,
+    #: nbytes) pairs (set on coalesced flushes; empty otherwise).  Lets the
+    #: stall attributor and replay un-fuse a coalesced stream
+    #: counterfactually without guessing the pre-fusion shape.
+    sources: tuple = ()
 
     @property
     def duration_s(self) -> float:
@@ -83,7 +98,8 @@ class TapeRecord:
         return cls(op_class=rec.op_class, direction=rec.direction,
                    nbytes=rec.nbytes, staging=rec.staging, channel=rec.channel,
                    t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged,
-                   tags=tuple(rec.tags), kind=rec.kind, bound=rec.bound)
+                   tags=tuple(rec.tags), kind=rec.kind, bound=rec.bound,
+                   sources=tuple(tuple(s) for s in rec.sources))
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -96,7 +112,9 @@ class TapeRecord:
                    t_end=float(d["t_end"]), charged=bool(d.get("charged", True)),
                    tags=tuple(d.get("tags", ())),
                    kind=d.get("kind", KIND_CROSSING),
-                   bound=d.get("bound", ""))
+                   bound=d.get("bound", ""),
+                   sources=tuple((str(s[0]), int(s[1]))
+                                 for s in d.get("sources", ())))
 
 
 @dataclass(frozen=True)

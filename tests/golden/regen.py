@@ -33,7 +33,7 @@ REL_TOL = 1e-9
 
 def _record_signature(r) -> tuple:
     return (r.op_class, r.direction, r.nbytes, r.staging, r.channel,
-            tuple(r.tags), r.charged, r.kind, r.bound)
+            tuple(r.tags), r.charged, r.kind, r.bound, tuple(r.sources))
 
 
 def _compare(fresh: BridgeTape, golden: BridgeTape, filename: str) -> list[str]:

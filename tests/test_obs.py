@@ -1,0 +1,552 @@
+"""Bridge observatory (DESIGN.md §9): metrics registry, request spans,
+stall attribution, timeline export, and the satellite surfaces.
+
+The laws pinned here:
+
+  * exact percentiles: the registry's histogram percentile is bit-identical
+    to numpy's linear-interpolation definition — merged snapshots pool raw
+    samples, so a fleet p99 is a real p99, never an average of p99s;
+  * registry merge: counters add, gauges last-writer-wins (only when
+    actually written), histogram samples extend;
+  * stall attribution conserves: the per-cause seconds sum EXACTLY to the
+    tape's bridge-vs-compute gap (unattributed idle is a named cause, not
+    a silent remainder), and on the golden tapes closure is ~1;
+  * timeline export round-trips: valid Chrome-trace JSON, one track per
+    secure channel, slices non-negative and in-bounds;
+  * tape v3 `sources`: coalesced records carry their constituent
+    (op_class, nbytes) pairs additively — v1/v2 tapes still load, and the
+    async-counterfactual replay un-fuses a sourced record into per-source
+    crossings;
+  * OffloadManager tracks restore completion per key: concurrent keyed
+    restores never share one landing time;
+  * the windowed barrier-noop share forgets history at window size, while
+    the lifetime share does not;
+  * the observatory is passive: attaching one changes no virtual-clock
+    outcome, and REPRO_OBS=0 disables it fleet-wide.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.bridge import B300, BridgeModel, Direction
+from repro.core.channels import SecureChannelPool, VirtualClock
+from repro.core.policy import (OffloadPolicy, SchedulingPolicy as SP,
+                               cc_aware_defaults, observability_default)
+from repro.obs import (CAUSE_FLUSH, CAUSE_FRESH, CAUSE_SERIAL,
+                       CAUSE_UNATTRIBUTED, CAUSES, MetricsRegistry,
+                       Observatory, SpanTracker, attribute_stalls,
+                       export_timeline, percentile, tape_to_trace_events)
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.offload import HostBlock, OffloadManager
+from repro.serving.overlap import OverlapScheduler
+from repro.serving.sampler import SamplingParams
+from repro.trace import opclasses as oc
+from repro.trace.harness import smoke_model
+from repro.trace.replay import rewrite_for_policy
+from repro.trace.tape import BridgeTape, TapeMeta, TapeRecord
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_TAPES = ("tape_sync.json", "tape_async.json", "tape_worker.json")
+
+
+def golden(name: str) -> BridgeTape:
+    return BridgeTape.load(os.path.join(GOLDEN_DIR, name))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return smoke_model()
+
+
+def make_engine(model, **default_overrides) -> ServingEngine:
+    bridge = BridgeModel(B300, cc_on=True)
+    defaults = dataclasses.replace(
+        cc_aware_defaults(True, concurrency=4), **default_overrides)
+    engine = ServingEngine(model, max_batch=4, max_len=64,
+                           policy=defaults.scheduling, bridge=bridge,
+                           defaults=defaults, seed=0)
+    engine.gateway.pool.prewarm()
+    return engine
+
+
+def run_requests(engine, n=4, max_new_tokens=6):
+    for i in range(n):
+        engine.submit(Request(
+            f"r{i}", prompt=[1, 2, 3],
+            sampling=SamplingParams(max_new_tokens=max_new_tokens)))
+    engine.run()
+
+
+def metric_rows(snap: dict) -> list[dict]:
+    """Flatten a registry (or Observatory ``metrics``) snapshot into one
+    row list across counters/gauges/histograms."""
+    metrics = snap.get("metrics", snap)
+    return (metrics["counters"] + metrics["gauges"] + metrics["histograms"])
+
+
+# ---------------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------------
+
+
+class TestPercentile:
+    def test_matches_numpy_exactly(self):
+        rng = np.random.default_rng(7)
+        for _ in range(100):
+            n = int(rng.integers(1, 40))
+            vals = rng.standard_normal(n).tolist()
+            for p in (0.0, 13.7, 50.0, 90.0, 99.0, 100.0):
+                assert percentile(vals, p) == float(np.percentile(vals, p))
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            percentile([], 50.0)
+
+
+class TestMetricsRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        reg.counter("c").inc()
+        reg.counter("c").inc(2.0)
+        assert reg.counter_total("c") == 3.0
+        reg.gauge("g").set(4.5)
+        h = reg.histogram("h")
+        for v in (1.0, 2.0, 3.0):
+            h.observe(v)
+        assert h.count == 3 and h.mean == 2.0
+        assert h.percentile(50.0) == 2.0
+
+    def test_labels_are_distinct_series(self):
+        reg = MetricsRegistry()
+        reg.counter("req", tenant="a").inc()
+        reg.counter("req", tenant="b").inc(2.0)
+        assert reg.counter("req", tenant="a").value == 1.0
+        assert reg.counter_total("req") == 3.0
+
+    def test_negative_counter_rejected(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.counter("c").inc(-1.0)
+
+    def test_merge_pools_samples_for_exact_percentiles(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        va = [1.0, 5.0, 9.0]
+        vb = [2.0, 4.0, 100.0]
+        for v in va:
+            a.histogram("lat").observe(v)
+        for v in vb:
+            b.histogram("lat").observe(v)
+        merged = MetricsRegistry.merge([a, b])
+        assert (merged.family_percentile("lat", 99.0)
+                == float(np.percentile(va + vb, 99.0)))
+
+    def test_merge_counters_add_gauges_last_written_wins(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.counter("n").inc(3.0)
+        b.counter("n").inc(4.0)
+        a.gauge("g").set(1.0)
+        b.gauge("g")          # touched but never written: must not clobber
+        a.merge_in(b)
+        assert a.counter_total("n") == 7.0
+        assert a.gauge("g").value == 1.0
+
+    def test_snapshot_rows_sorted_and_complete(self):
+        reg = MetricsRegistry()
+        reg.counter("z").inc()
+        reg.counter("a", k="1").inc()
+        reg.histogram("h").observe(2.0)
+        snap = reg.snapshot()
+        counter_names = [r["name"] for r in snap["counters"]]
+        assert counter_names == sorted(counter_names)
+        hist_row = snap["histograms"][0]
+        assert hist_row["name"] == "h"
+        assert hist_row["p50"] == 2.0 and hist_row["count"] == 1
+
+
+# ---------------------------------------------------------------------------------
+# request spans
+# ---------------------------------------------------------------------------------
+
+
+class TestSpans:
+    def test_lifecycle_derives_ttft_tpot(self):
+        reg = MetricsRegistry()
+        tr = SpanTracker(reg)
+        tr.on_enqueue("r", 1.0)
+        tr.on_admit("r", 2.0)
+        for t in (3.0, 3.5, 4.5):
+            tr.on_token("r", t)
+        tr.on_finish("r", 5.0)
+        span = tr.spans["r"]
+        assert span.queue_wait_s == 1.0
+        assert span.ttft_s == 2.0
+        assert span.e2e_s == 4.0
+        assert span.tpot_samples() == [0.5, 1.0]
+        # series are labeled by request_class; the family views pool them
+        assert len(reg.histogram_values("req/ttft_s")) == 1
+        assert len(reg.histogram_values("req/tpot_s")) == 2
+
+    def test_enqueue_is_last_wins(self):
+        tr = SpanTracker()
+        tr.on_enqueue("r", 5.0)     # engine stamps admission-path time...
+        tr.on_enqueue("r", 1.0)     # ...replica re-stamps true arrival
+        tr.on_admit("r", 6.0)
+        assert tr.spans["r"].queue_wait_s == 5.0
+
+    def test_restore_wait_accumulates(self):
+        tr = SpanTracker()
+        tr.on_restore_wait("r", 0.25)
+        tr.on_restore_wait("r", 0.5)
+        assert tr.spans["r"].restore_wait_s == 0.75
+
+
+# ---------------------------------------------------------------------------------
+# stall attribution
+# ---------------------------------------------------------------------------------
+
+
+class TestStallAttribution:
+    @pytest.mark.parametrize("name", GOLDEN_TAPES)
+    def test_conserves_exactly_on_golden_tapes(self, name):
+        rep = attribute_stalls(golden(name))
+        # conservation is a law, not an approximation: every gap second is
+        # attributed to a named cause (unattributed idle included)
+        assert abs(sum(rep.causes.values()) - rep.gap_s) < 1e-9
+        assert rep.gap_s >= 0.0
+
+    @pytest.mark.parametrize("name", GOLDEN_TAPES)
+    def test_closure_on_golden_tapes(self, name):
+        # the acceptance bar: the named (non-unattributed) causes cover the
+        # gap within 1%
+        assert attribute_stalls(golden(name)).closure >= 0.99
+
+    def test_fresh_toll_dominates_cc_on_fresh_tape(self):
+        rep = attribute_stalls(golden("tape_sync.json"))
+        assert rep.causes.get(CAUSE_FRESH, 0.0) > 0.0
+        assert rep.cc_on is True
+
+    def test_causes_vocabulary_is_closed(self):
+        rep = attribute_stalls(golden("tape_async.json"))
+        assert set(rep.causes) <= set(CAUSES)
+        d = rep.to_dict()
+        assert set(d["causes"]) == set(CAUSES)
+
+    def test_empty_tape_has_zero_gap(self):
+        tape = BridgeTape(meta=TapeMeta(profile="B300", cc_on=True))
+        rep = attribute_stalls(tape)
+        assert rep.gap_s == 0.0 and rep.closure == 1.0
+
+
+# ---------------------------------------------------------------------------------
+# timeline export
+# ---------------------------------------------------------------------------------
+
+
+class TestTimeline:
+    def test_round_trip_valid_chrome_trace(self, tmp_path):
+        tape = golden("tape_worker.json")
+        path = tmp_path / "trace.json"
+        out = export_timeline(tape, str(path))
+        with open(path) as f:
+            loaded = json.load(f)
+        assert loaded == out
+        assert loaded["displayTimeUnit"] == "ms"
+        events = loaded["traceEvents"]
+        assert events, "golden tape must produce events"
+        for ev in events:
+            assert ev["ph"] in ("M", "X", "s", "f", "i")
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 0 and ev["ts"] >= 0
+
+    def test_one_track_per_channel(self):
+        tape = golden("tape_worker.json")
+        events = tape_to_trace_events(tape)
+        channels = {r.channel for r in tape.records
+                    if r.kind == "crossing" and r.channel >= 0}
+        tracks = {ev["args"]["name"] for ev in events
+                  if ev["ph"] == "M" and ev["name"] == "thread_name"
+                  and "channel" in ev["args"]["name"]}
+        assert len(tracks) == len(channels)
+
+    def test_stall_slices_respect_attribution(self):
+        tape = golden("tape_sync.json")
+        rep = attribute_stalls(tape)
+        events = tape_to_trace_events(tape, stalls=rep)
+        stall_slices = [ev for ev in events
+                        if ev["ph"] == "X" and ev["tid"] == 999]
+        total_us = sum(ev["dur"] for ev in stall_slices)
+        # stall track duration matches the attributed seconds it renders
+        rendered = sum(
+            (s.t_end - s.t_start) for s in rep.intervals
+            if s.note in ("idle", "wait") or s.cause == CAUSE_FRESH)
+        assert total_us == pytest.approx(rendered * 1e6, rel=1e-6)
+
+    def test_spans_render_as_instants(self, model):
+        engine = make_engine(model)
+        try:
+            run_requests(engine, n=2)
+            events = tape_to_trace_events(
+                BridgeTape(meta=TapeMeta(profile="B300", cc_on=True)),
+                spans=engine.obs.spans)
+        finally:
+            engine.close()
+        instants = [ev for ev in events if ev["ph"] == "i"]
+        assert any("first_token" in ev["name"] for ev in instants)
+
+
+# ---------------------------------------------------------------------------------
+# tape v3: sources + replay un-fuse
+# ---------------------------------------------------------------------------------
+
+
+class TestTapeSources:
+    def test_sources_round_trip(self, tmp_path):
+        rec = TapeRecord(
+            op_class=oc.COALESCED_H2D, direction="h2d", nbytes=192,
+            staging="registered", channel=0, t_start=0.0, t_end=1e-4,
+            sources=((oc.ALLOC_H2D, 64), (oc.PREP_BATCHED_H2D, 128)))
+        tape = BridgeTape(meta=TapeMeta(profile="B300", cc_on=True),
+                          records=[rec])
+        path = tmp_path / "t.json"
+        tape.save(str(path))
+        loaded = BridgeTape.load(str(path))
+        assert loaded.records[0].sources == (
+            (oc.ALLOC_H2D, 64), (oc.PREP_BATCHED_H2D, 128))
+
+    def test_older_versions_still_load(self, tmp_path):
+        tape = golden("tape_sync.json")
+        for version in ("bridge-tape/v1", "bridge-tape/v2"):
+            blob = tape.to_dict()
+            blob["format"] = version
+            for r in blob["records"]:
+                r.pop("sources", None)
+            path = tmp_path / "old.json"
+            path.write_text(json.dumps(blob))
+            loaded = BridgeTape.load(str(path))
+            assert loaded.n_crossings() == tape.n_crossings()
+            assert all(r.sources == () for r in loaded.records)
+
+    def test_coalescer_stamps_sources_and_trigger(self, model):
+        engine = make_engine(model, coalesce_small_crossings=True,
+                             staging_arena_bytes=64 << 20)
+        from repro.trace.recorder import TraceRecorder
+        rec = TraceRecorder(engine.gateway, policy="sync",
+                            label="sources").attach()
+        try:
+            engine.coalescer.charge(64, Direction.H2D,
+                                    op_class=oc.ALLOC_H2D)
+            engine.coalescer.charge(128, Direction.H2D,
+                                    op_class=oc.PREP_BATCHED_H2D)
+            engine.coalescer.barrier()
+            tape = rec.tape()
+        finally:
+            rec.detach()
+            engine.close()
+        fused = [r for r in tape.records
+                 if r.op_class == oc.COALESCED_H2D]
+        assert fused, "barrier must flush a fused crossing"
+        assert fused[0].sources == ((oc.ALLOC_H2D, 64),
+                                    (oc.PREP_BATCHED_H2D, 128))
+        assert any(t.startswith("flush_") for t in fused[0].tags)
+
+    def test_replay_unfuses_sourced_records(self):
+        rec = TapeRecord(
+            op_class=oc.COALESCED_H2D, direction="h2d", nbytes=192,
+            staging="registered", channel=0, t_start=0.0, t_end=3e-4,
+            sources=((oc.ALLOC_H2D, 64), (oc.PROMPT_H2D, 128)))
+        rewritten = rewrite_for_policy([rec], "async")
+        assert len(rewritten) == 2
+        assert [r.op_class for r in rewritten] == [oc.ALLOC_H2D,
+                                                   oc.ALLOC_H2D]
+        assert [r.nbytes for r in rewritten] == [64, 128]
+        # recorded_s prorated by bytes: 1/3 and 2/3 of the fused duration
+        assert rewritten[0].recorded_s == pytest.approx(1e-4)
+        assert rewritten[1].recorded_s == pytest.approx(2e-4)
+
+    def test_sourceless_coalesced_record_keeps_old_behavior(self):
+        rec = TapeRecord(
+            op_class=oc.COALESCED_H2D, direction="h2d", nbytes=192,
+            staging="registered", channel=0, t_start=0.0, t_end=3e-4)
+        rewritten = rewrite_for_policy([rec], "async")
+        assert len(rewritten) == 1
+        assert rewritten[0].nbytes == 192
+
+
+# ---------------------------------------------------------------------------------
+# satellites: per-key restore completion, windowed noop share
+# ---------------------------------------------------------------------------------
+
+
+class TestPerKeyRestoreDoneT:
+    def test_concurrent_keyed_restores_keep_distinct_done_t(self):
+        bridge = BridgeModel(B300, cc_on=True)
+        from repro.core.gateway import TransferGateway
+        gw = TransferGateway(bridge, cc_aware_defaults(True),
+                             pool_workers=4)
+        gw.pool.prewarm()
+        mgr = OffloadManager(gw, OffloadPolicy.REUSE_AWARE,
+                             pipelined_restore=True,
+                             restore_chunk_bytes=8 << 10)
+        for b in range(64):
+            mgr.host_store[b] = HostBlock(b, 128 << 10, 2, None)
+        mgr.restore(list(range(32)), key="a")
+        done_a = mgr.restore_done_t["a"]
+        mgr.restore(list(range(32, 64)), key="b")
+        done_b = mgr.restore_done_t["b"]
+        # request b's later pipeline lands later, and must NOT retroactively
+        # move request a's completion (the single-slot bug this fixes)
+        assert done_b > done_a
+        assert mgr.restore_done_t["a"] == done_a
+        # the legacy single-slot view still tracks the most recent restore
+        assert mgr.last_restore_done_t == done_b
+
+    def test_unkeyed_restore_not_tracked_per_key(self):
+        bridge = BridgeModel(B300, cc_on=True)
+        from repro.core.gateway import TransferGateway
+        gw = TransferGateway(bridge, cc_aware_defaults(True))
+        mgr = OffloadManager(gw, OffloadPolicy.REUSE_AWARE)
+        mgr.host_store[0] = HostBlock(0, 1024, 2, None)
+        mgr.restore([0])
+        assert mgr.restore_done_t == {}
+
+
+class TestWindowedNoopShare:
+    def make_scheduler(self, window):
+        clock = VirtualClock()
+        pool = SecureChannelPool(BridgeModel(B300, cc_on=True), clock=clock,
+                                 n_workers=2)
+        return OverlapScheduler(clock, pool, barrier_window=window), clock
+
+    def test_window_forgets_history(self):
+        ov, clock = self.make_scheduler(window=4)
+        # 4 waits (cold), then 4 noops (warm)
+        for i in range(4):
+            ov.note_restore(f"w{i}", clock.now + 1.0)
+            ov.restore_barrier(f"w{i}")
+        assert ov.windowed_noop_share() == 0.0
+        for i in range(4):
+            ov.note_restore(f"n{i}", 0.0)
+            ov.restore_barrier(f"n{i}")
+        # lifetime share says half warm; the window says fully warm NOW
+        assert ov.stats.barrier_noops / 8 == 0.5
+        assert ov.windowed_noop_share() == 1.0
+
+    def test_empty_window_is_zero(self):
+        ov, _ = self.make_scheduler(window=4)
+        assert ov.windowed_noop_share() == 0.0
+        assert ov.stats_dict()["windowed_noop_share"] == 0.0
+
+
+# ---------------------------------------------------------------------------------
+# integration: engine / replica / cluster surfaces
+# ---------------------------------------------------------------------------------
+
+
+class TestEngineObservatory:
+    def test_engine_emits_spans_and_bridge_counters(self, model):
+        engine = make_engine(model)
+        try:
+            run_requests(engine, n=3, max_new_tokens=5)
+            snap = engine.obs.snapshot()
+        finally:
+            engine.close()
+        rows = metric_rows(snap)
+        finished = [r for r in rows if r["name"] == "req/finished"]
+        assert finished and finished[0]["value"] == 3.0
+        ttft = [r for r in rows if r["name"] == "req/ttft_s"]
+        assert ttft and ttft[0]["count"] == 3
+        assert all(s.finish_t is not None
+                   for s in engine.obs.spans.spans.values())
+        # crossing stream reached the registry through on_record
+        assert any(r["name"] == "bridge/crossings" for r in rows)
+
+    def test_observatory_is_passive_on_virtual_clock(self, model):
+        outcomes = {}
+        for obs_on in (True, False):
+            engine = make_engine(model, observability=obs_on)
+            try:
+                run_requests(engine, n=3, max_new_tokens=5)
+                outcomes[obs_on] = (
+                    engine.clock.now,
+                    engine.gateway.stats.bridge_time_s,
+                    [tuple(r.output_tokens) for r in engine.finished])
+            finally:
+                engine.close()
+        assert outcomes[True] == outcomes[False]
+
+    def test_repro_obs_env_disables(self, model, monkeypatch):
+        monkeypatch.setenv("REPRO_OBS", "0")
+        assert observability_default() is False
+        engine = make_engine(model, observability=observability_default())
+        try:
+            assert engine.obs is None
+        finally:
+            engine.close()
+
+
+class TestClusterObservatory:
+    def test_replica_stats_export_obs(self, model):
+        from repro.cluster import build_cluster
+        router = build_cluster(model, cc_on=True, n_replicas=2)
+        try:
+            for i in range(6):
+                router.submit(Request(
+                    f"r{i}", prompt=[1, 2, 3, 4, 5, 6, 7, 8],
+                    sampling=SamplingParams(max_new_tokens=4)))
+            stats = router.run()
+        finally:
+            router.close()
+        served_any = False
+        for rs in stats["replicas"]:
+            assert rs["obs"] is not None
+            rows = metric_rows(rs["obs"])
+            # prefix affinity concentrates identical prompts on one replica;
+            # only replicas that actually served requests have request series
+            if rs["finished"] == 0:
+                continue
+            served_any = True
+            labeled = [r for r in rows if r["name"] == "req/finished"]
+            assert labeled and labeled[0]["value"] == rs["finished"]
+            # every replica row is labeled with its identity
+            assert labeled[0]["labels"]["replica"] == rs["replica_id"]
+        assert served_any
+        # fleet merge: finished counters add across replicas
+        total = sum(r["value"] for r in metric_rows(stats["obs"])
+                    if r["name"] == "req/finished")
+        assert total == stats["finished"]
+
+    def test_replica_metrics_windowed_share(self, model):
+        from repro.cluster import build_cluster
+        router = build_cluster(model, cc_on=True, n_replicas=1)
+        try:
+            router.submit(Request(
+                "r0", prompt=[1, 2, 3],
+                sampling=SamplingParams(max_new_tokens=4)))
+            router.run()
+            replica = router.replicas[0]
+            m = replica.metrics()
+            assert 0.0 <= m.overlap_noop_share_windowed <= 1.0
+            names = {r["name"]
+                     for r in metric_rows(replica.obs.snapshot())}
+            assert "replica/overlap_noop_share" in names
+            assert "replica/overlap_noop_share_windowed" in names
+        finally:
+            router.close()
+
+    def test_autoscaler_records_decisions(self, model):
+        from repro.cluster import build_cluster
+        from repro.cluster.autoscaler import Autoscaler
+        router = build_cluster(model, cc_on=True, n_replicas=2)
+        try:
+            reg = MetricsRegistry()
+            scaler = Autoscaler(router.budget, registry=reg)
+            scaler.evaluate([r.metrics() for r in router.replicas])
+            assert reg.counter_total("autoscaler/decisions") == 1.0
+            snap_names = {r["name"] for r in metric_rows(reg.snapshot())}
+            assert "autoscaler/bridge_fraction" in snap_names
+        finally:
+            router.close()

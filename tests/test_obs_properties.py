@@ -1,0 +1,123 @@
+"""Property-based tests for the observatory's metrics algebra.
+
+The fleet-merge story (router.stats() pooling per-replica registries)
+rests on two algebraic facts these properties pin:
+
+  * merge is associative and order-insensitive for every metric kind —
+    counters are sums, histograms pool raw samples, gauges are
+    last-writer-wins only when actually written — so a fleet snapshot is
+    the same no matter how the router groups or orders replicas;
+  * the histogram percentile is exactly numpy's linear-interpolation
+    percentile on the pooled samples for ANY sample multiset and
+    percentile, which is what makes a merged p99 a true p99.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.obs import MetricsRegistry, percentile
+
+finite = st.floats(allow_nan=False, allow_infinity=False,
+                   min_value=-1e9, max_value=1e9)
+
+#: one registry's worth of activity: counter increments, gauge writes,
+#: histogram observations — over a small name universe so merges collide
+NAMES = ("a", "b", "c")
+acts = st.lists(
+    st.tuples(st.sampled_from(("counter", "gauge", "hist")),
+              st.sampled_from(NAMES),
+              st.floats(allow_nan=False, allow_infinity=False,
+                        min_value=0.0, max_value=1e6)),
+    min_size=0, max_size=20)
+
+
+def build(activity) -> MetricsRegistry:
+    reg = MetricsRegistry()
+    for kind, name, value in activity:
+        if kind == "counter":
+            reg.counter(name).inc(value)
+        elif kind == "gauge":
+            reg.gauge(name).set(value)
+        else:
+            reg.histogram(name).observe(value)
+    return reg
+
+
+def canonical(reg: MetricsRegistry) -> tuple:
+    """Order-free summary of a registry's state (histogram samples as
+    multisets: merge order must not matter for any derived statistic)."""
+    snap = reg.snapshot()
+    hists = tuple(sorted(
+        (h["name"], h["count"], h["sum"], h["p50"], h["p90"], h["p99"])
+        for h in snap["histograms"]))
+    counters = tuple(sorted((c["name"], c["value"])
+                            for c in snap["counters"]))
+    return counters, hists
+
+
+class TestMergeAlgebra:
+    @settings(max_examples=50, deadline=None)
+    @given(a=acts, b=acts, c=acts)
+    def test_merge_is_associative(self, a, b, c):
+        """(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) for counters and histograms."""
+        left = MetricsRegistry.merge(
+            [MetricsRegistry.merge([build(a), build(b)]), build(c)])
+        right = MetricsRegistry.merge(
+            [build(a), MetricsRegistry.merge([build(b), build(c)])])
+        la, lh = canonical(left)
+        ra, rh = canonical(right)
+        assert lh == rh
+        for (ln, lv), (rn, rv) in zip(la, ra):
+            assert ln == rn
+            assert lv == pytest.approx(rv)
+
+    @settings(max_examples=50, deadline=None)
+    @given(a=acts, b=acts)
+    def test_merge_in_matches_classmethod(self, a, b):
+        target = build(a)
+        target.merge_in(build(b))
+        assert canonical(target) == canonical(
+            MetricsRegistry.merge([build(a), build(b)]))
+
+    @settings(max_examples=50, deadline=None)
+    @given(a=acts)
+    def test_merge_with_empty_is_identity(self, a):
+        merged = MetricsRegistry.merge([build(a), MetricsRegistry()])
+        assert canonical(merged) == canonical(build(a))
+
+    @settings(max_examples=50, deadline=None)
+    @given(a=acts, b=acts)
+    def test_unwritten_gauge_never_clobbers(self, a, b):
+        """A gauge that was touched but never written must not erase a
+        written value on merge (the associativity precondition)."""
+        left = build(a)
+        right = build(b)
+        left.gauge("z").set(7.0)
+        right.gauge("z")        # touched, never written
+        left.merge_in(right)
+        assert left.gauge("z").value == 7.0
+
+
+class TestPercentileExactness:
+    @settings(max_examples=100, deadline=None)
+    @given(vals=st.lists(finite, min_size=1, max_size=50),
+           p=st.floats(min_value=0.0, max_value=100.0))
+    def test_matches_numpy_for_any_samples(self, vals, p):
+        assert percentile(vals, p) == float(np.percentile(vals, p))
+
+    @settings(max_examples=50, deadline=None)
+    @given(a=st.lists(finite, min_size=1, max_size=25),
+           b=st.lists(finite, min_size=1, max_size=25))
+    def test_merged_percentile_is_pooled_not_averaged(self, a, b):
+        ra, rb = MetricsRegistry(), MetricsRegistry()
+        for v in a:
+            ra.histogram("h").observe(v)
+        for v in b:
+            rb.histogram("h").observe(v)
+        merged = MetricsRegistry.merge([ra, rb])
+        assert (merged.family_percentile("h", 99.0)
+                == float(np.percentile(a + b, 99.0)))
