@@ -12,14 +12,26 @@ from __future__ import annotations
 
 import functools
 
+from repro.configs.base import get_config
 from repro.core.bridge import B300, H200
 from repro.core.policy import SchedulingPolicy as SP
 from repro.core.simulator import Observation, ServingWorkload, fit_workload
 
+#: nominal decode-time context depth of the paper's serving tables (1k-in /
+#: 1k-out workload, mid-generation) — the KV term of the roofline-anchored
+#: forward.  The fit's efficiency factor absorbs the exact value; it only
+#: moves how the forward splits into weight vs KV traffic in the report.
+PAPER_KV_LEN = 1536.0
+
 
 @functools.lru_cache()
 def qwen27b_c128() -> ServingWorkload:
-    """§5.4 table: Qwen3.6-27B-FP8, c=128, B300."""
+    """§5.4 table: Qwen3.6-27B-FP8, c=128, B300.
+
+    Roofline-anchored (DESIGN.md §10): the forward term is
+    ``eff x ComputeModel.decode_step_s(128, kv_len=PAPER_KV_LEN)`` — the
+    same pricing source the engine's compute-charged clock uses.
+    """
     obs = [
         Observation(SP.ASYNC_OVERLAP, False, tpot_ms=23.64),
         Observation(SP.ASYNC_OVERLAP, True, tpot_ms=31.10),
@@ -27,7 +39,8 @@ def qwen27b_c128() -> ServingWorkload:
         Observation(SP.SYNC_DRAIN, True, tpot_ms=26.92),
     ]
     return fit_workload("qwen3p6-27b-c128", 128, B300, obs,
-                        eff_tokens_per_step=4522 * 23.64e-3)
+                        eff_tokens_per_step=4522 * 23.64e-3,
+                        cfg=get_config("qwen3p6-27b"), kv_len=PAPER_KV_LEN)
 
 
 @functools.lru_cache()
@@ -36,7 +49,8 @@ def sweep_workloads() -> dict:
 
     Cells: c=128 (vanilla 3629 / sync 3856 / v10c 3942 / gold 4653),
     c=256 (sync 4766 / v10c 5073), c=512 (vanilla 5026 / sync 5004 /
-    v10c 5518 / gold 6020, CC-off sync 5226).
+    v10c 5518 / gold 6020, CC-off sync 5226).  Roofline-anchored like
+    ``qwen27b_c128``.
     """
     rows = {
         128: [
@@ -57,7 +71,9 @@ def sweep_workloads() -> dict:
             Observation(SP.SYNC_DRAIN, False, tokens_per_s=5226),
         ],
     }
-    return {c: fit_workload(f"qwen3p6-27b-c{c}", c, B300, obs)
+    return {c: fit_workload(f"qwen3p6-27b-c{c}", c, B300, obs,
+                            cfg=get_config("qwen3p6-27b"),
+                            kv_len=PAPER_KV_LEN)
             for c, obs in rows.items()}
 
 

@@ -56,6 +56,24 @@ COMPUTE_SPECS = {
 DEFAULT_SPEC = COMPUTE_SPECS["tpu-v5e"]
 
 
+def spec_for_profile(profile_name: str) -> ComputeSpec:
+    """Roofline for a bridge profile — unknown names are an error.
+
+    The silent historical fallback (unknown -> TPU v5e) mispriced every
+    charge on an unrecognized platform by ~10x without a word, which
+    corrupts exactly the compute/crossing ratio the recovery numbers are
+    measured against.  A caller with a platform we have no roofline for
+    must say what it costs (``ComputeModel(..., spec=...)``).
+    """
+    try:
+        return COMPUTE_SPECS[profile_name]
+    except KeyError:
+        known = ", ".join(sorted(COMPUTE_SPECS))
+        raise ValueError(
+            f"no ComputeSpec for bridge profile {profile_name!r} "
+            f"(known: {known}); pass spec= explicitly") from None
+
+
 def _dtype_bytes(dtype) -> int:
     try:
         return int(np.dtype(dtype).itemsize)
@@ -93,7 +111,8 @@ class ComputeModel:
                  spec: Optional[ComputeSpec] = None):
         self.cfg = cfg
         self.bridge = bridge
-        self.spec = spec or COMPUTE_SPECS.get(bridge.profile.name, DEFAULT_SPEC)
+        self.spec = spec if spec is not None else spec_for_profile(
+            bridge.profile.name)
         self.active_params = float(cfg.active_param_count())
         self.bytes_per_param = _dtype_bytes(cfg.dtype)
 
@@ -112,8 +131,15 @@ class ComputeModel:
     def decode_charge(self, batch: int, *, kv_len: float = 0.0) -> ComputeCharge:
         """One batched decode step: every active param touched once (weight
         reads dominate), plus the KV read for each sequence's cached prefix.
+
+        An empty batch charges zero seconds: the engine's nothing-ready path
+        takes the pipeline barrier, never a forward — the old
+        ``max(1, batch)`` clamp billed one slot's FLOPs *and* the full
+        weight stream for a step that never ran.
         """
-        batch = max(1, int(batch))
+        batch = max(0, int(batch))
+        if batch == 0:
+            return ComputeCharge("decode", 0.0, 0.0, 0.0, "compute")
         flops = 2.0 * self.active_params * batch
         hbm = (self.active_params * self.bytes_per_param
                + batch * max(0.0, kv_len) * self.kv_bytes_per_token())
@@ -136,8 +162,15 @@ class ComputeModel:
         coalescer deadlines and restore-overlap windows must see, or the
         clock would bill deferred work that never ran.  Per-slot ``kv_lens``
         (not a batch mean) because the ready set's prefix lengths are known.
+
+        An empty ready set charges zero (see ``decode_charge``): zero ready
+        slots means no forward ran, so billing one phantom slot — as the
+        old ``max(1, len(kv_lens))`` did — charged a full weight stream for
+        nothing.
         """
-        ready = max(1, len(kv_lens))
+        ready = len(kv_lens)
+        if ready == 0:
+            return ComputeCharge("decode", 0.0, 0.0, 0.0, "compute")
         flops = 2.0 * self.active_params * ready
         hbm = (self.active_params * self.bytes_per_param
                + sum(max(0.0, k) for k in kv_lens) * self.kv_bytes_per_token())
@@ -145,6 +178,27 @@ class ComputeModel:
 
     def decode_step_masked_s(self, kv_lens: "Sequence[float]") -> float:
         return self.decode_charge_masked(kv_lens).seconds
+
+    # -- packed ragged decode (DESIGN.md §10) -------------------------------------------
+
+    def decode_charge_packed(self, kv_lens: "Sequence[float]") -> ComputeCharge:
+        """One packed ragged decode step priced for the packed set.
+
+        Packing is an *execution* change — the forward runs over exactly the
+        packed rows instead of a dense batch padded to the widest slot set —
+        not a pricing change: the packed set's charge is identical to a
+        slot-masked step over the same per-slot KV lengths (weights stream
+        once regardless of how the rows are laid out; KV traffic sums the
+        packed prefixes).  Kept as its own entry point so the engine's
+        DECODE_PACKED records and the parity property
+        (``packed == masked == dense`` for equal lengths) both have a named
+        subject, and so a future paged-attention packed kernel can diverge
+        here without touching the masked path.
+        """
+        return self.decode_charge_masked(kv_lens)
+
+    def decode_step_packed_s(self, kv_lens: "Sequence[float]") -> float:
+        return self.decode_charge_packed(kv_lens).seconds
 
     # -- prefill ------------------------------------------------------------------------
 

@@ -85,6 +85,14 @@ class ServingWorkload:
     #: small per-step input crossings; MoE adds routing-metadata crossings
     #: ("irreducible bridge traffic at the framework level", §5.4)
     n_small_h2d: int = N_SMALL_H2D
+    #: where forward_ms came from: "calibrated" (free least-squares term,
+    #: the historical path) or "roofline" (``eff x ComputeModel`` — the one
+    #: pricing source the engine's clock also charges; DESIGN.md §10)
+    forward_source: str = "calibrated"
+    #: measured forward as a multiple of the ideal roofline step (>= 1 means
+    #: below roofline; ``1/roofline_eff`` is the MFU/MBU-style achieved
+    #: fraction).  Meaningful only when forward_source == "roofline".
+    roofline_eff: float = 0.0
 
     @property
     def tokens_per_step(self) -> float:
@@ -210,6 +218,41 @@ def simulate_matrix(
 
 
 # ---------------------------------------------------------------------------------
+# One pricing source (DESIGN.md §10): the simulator's forward term is the same
+# ComputeModel roofline the engine's clock charges.  A calibrated workload is a
+# roofline step scaled by one dimensionless achieved-efficiency factor, so the
+# §5 tables and the engine can never price the forward from different models.
+# ---------------------------------------------------------------------------------
+
+
+def roofline_forward_ms(cfg, profile: BridgeProfile, batch: int, *,
+                        kv_len: float = 0.0, spec=None) -> float:
+    """One decode step's forward time (ms) from the ComputeModel roofline.
+
+    Priced CC-off (device-local work is at parity, L5 — the ``forward_ms``
+    the step model carries is policy- and CC-independent by construction).
+    """
+    from .compute import ComputeModel
+    cm = ComputeModel(cfg, BridgeModel(profile, cc_on=False), spec=spec)
+    return cm.decode_step_s(batch, kv_len=kv_len) / MS
+
+
+def roofline_workload(name: str, cfg, profile: BridgeProfile,
+                      concurrency: int, *, kv_len: float = 0.0,
+                      eff: float = 1.0, prep_cpu_ms: float = 0.0,
+                      gpu_stream_gain_ms: float = 0.0,
+                      **kw) -> ServingWorkload:
+    """Build a workload whose forward term is ``eff x`` the ComputeModel
+    roofline step — no measured table required (the bench_packed sweep uses
+    this to price arbitrary config x batch x length cells)."""
+    fwd = eff * roofline_forward_ms(cfg, profile, concurrency, kv_len=kv_len)
+    return ServingWorkload(
+        name, concurrency, forward_ms=fwd, prep_cpu_ms=prep_cpu_ms,
+        gpu_stream_gain_ms=gpu_stream_gain_ms,
+        forward_source="roofline", roofline_eff=eff, **kw)
+
+
+# ---------------------------------------------------------------------------------
 # Calibration: the step model is linear in (forward, prep_cpu, gpu_stream_gain),
 # so fitting a workload to measured table cells is a least-squares solve.
 # ---------------------------------------------------------------------------------
@@ -225,7 +268,7 @@ class Observation:
 def fit_workload(
     name: str, concurrency: int, profile: BridgeProfile,
     observations: list[Observation], *, eff_tokens_per_step: float = 0.0,
-    n_small_h2d: int = N_SMALL_H2D,
+    n_small_h2d: int = N_SMALL_H2D, cfg=None, kv_len: float = 0.0,
 ) -> ServingWorkload:
     """Fit (forward, prep_cpu, gpu_stream_gain) to measured table cells.
 
@@ -233,11 +276,23 @@ def fit_workload(
     fit is a damped Gauss-Newton around the current iterate rather than one
     linear solve.  Converges in a handful of iterations for every paper table
     (the pieces are flat and the tables are near-consistent with the model).
+
+    With a ``cfg`` (ModelConfig), the forward term is not a free millisecond
+    count: the fit solves for a dimensionless achieved-efficiency factor on
+    the ComputeModel roofline step (``forward_ms = eff x roofline``) — the
+    same reparameterized linear space, so the fitted workload is numerically
+    identical, but the §5 tables and the engine's clock now share one
+    pricing source and the fit's residual is an honest MFU/MBU-style
+    statement (``roofline_eff``) instead of an unanchored constant.
     """
     probe = ServingWorkload(name, concurrency, 0.0, 0.0, 0.0,
                             eff_tokens_per_step=eff_tokens_per_step,
                             n_small_h2d=n_small_h2d)
     tps_const = probe.tokens_per_step
+    #: ms of forward per unit of x[0]: the roofline step when anchored to a
+    #: config, 1.0 (x[0] is itself the ms) on the legacy free-term path
+    base_ms = (roofline_forward_ms(cfg, profile, concurrency, kv_len=kv_len)
+               if cfg is not None else 1.0)
 
     targets = []
     for obs in observations:
@@ -251,14 +306,15 @@ def fit_workload(
     bridges = {cc: BridgeModel(profile, cc_on=cc) for cc in (False, True)}
 
     def predict(x: np.ndarray) -> np.ndarray:
-        w = replace(probe, forward_ms=float(x[0]), prep_cpu_ms=float(x[1]),
+        w = replace(probe, forward_ms=float(x[0]) * base_ms,
+                    prep_cpu_ms=float(x[1]),
                     gpu_stream_gain_ms=float(x[2]))
         return np.array([
             step_breakdown(p, bridges[cc], w).tpot / MS for p, cc, _ in targets])
 
     y = np.array([t for _, _, t in targets])
     # init: forward = 80% of fastest cell, small prep, small gain
-    x = np.array([0.8 * y.min(), 0.15 * y.min(), 0.5])
+    x = np.array([0.8 * y.min() / base_ms, 0.15 * y.min(), 0.5])
     eps = 1e-3
     for _ in range(60):
         f0 = predict(x)
@@ -273,11 +329,13 @@ def fit_workload(
         x = np.clip(x + 0.8 * step, 0.0, None)
         if np.linalg.norm(step) < 1e-9:
             break
-    fwd, prep, gain = [float(v) for v in x]
+    fwd, prep, gain = float(x[0]) * base_ms, float(x[1]), float(x[2])
     return ServingWorkload(
         name, concurrency, forward_ms=fwd, prep_cpu_ms=prep,
         gpu_stream_gain_ms=gain, eff_tokens_per_step=eff_tokens_per_step,
         n_small_h2d=n_small_h2d,
+        forward_source="roofline" if cfg is not None else "calibrated",
+        roofline_eff=float(x[0]) if cfg is not None else 0.0,
     )
 
 

@@ -43,6 +43,7 @@ from repro.core.policy import RuntimeDefaults, SchedulingPolicy, cc_aware_defaul
 from repro.obs import Observatory
 from repro.trace import opclasses as oc
 from repro.models.model import Model
+from .kv_cache import RaggedBatch, gather_slot_cache, scatter_slot_cache
 from .overlap import OverlapScheduler
 from .sampler import SamplingParams, sample
 
@@ -82,6 +83,10 @@ class StepTrace:
     #: still draining (slot-masked decode; 0 on every unmasked step, so a
     #: non-restore workload's trace is identical with the flag on or off)
     deferred: int = 0
+    #: rows the packed forward executed (packed ragged decode, DESIGN.md
+    #: §10); 0 on legacy dense steps — so `packed == active` on every packed
+    #: step and the trace distinguishes the two execution shapes
+    packed: int = 0
 
 
 class ServingEngine:
@@ -155,6 +160,13 @@ class ServingEngine:
         self._drain_q: "queue.Queue" = queue.Queue()
         self._decode = jax.jit(
             lambda p, c, t, i: self.model.decode_step(p, c, t, i))
+        # packed ragged decode (DESIGN.md §10): gather the packed rows out
+        # of the resident cache, run the forward at the packed width, and
+        # scatter the updated rows back.  jit caches one trace per packed
+        # width; `_bucket` pads widths to powers of two so the trace count
+        # stays O(log max_batch) even when the ready set raggedly shrinks
+        # slot by slot as requests finish.
+        self._packed_decode = jax.jit(self._packed_step)
 
         # worker x coalescer composition: with a coalescer the drains queue
         # and the worker's seat becomes a secure channel the fused flushes
@@ -166,6 +178,25 @@ class ServingEngine:
                 self._start_worker()
             else:
                 self.gateway.pool.prewarm()
+
+    def _packed_step(self, params, caches, tokens, index, slots):
+        packed = gather_slot_cache(caches, slots,
+                                   scan_layers=self.cfg.scan_layers)
+        logits, packed = self.model.decode_step(params, packed, tokens, index)
+        caches = scatter_slot_cache(caches, packed, slots,
+                                    scan_layers=self.cfg.scan_layers)
+        return logits, caches
+
+    def _bucket(self, n: int) -> int:
+        """Smallest power-of-two >= n, capped at max_batch: the executed
+        width of a packed step.  Pad rows duplicate a real slot, so the
+        duplicate scatter writes carry identical values (deterministic) —
+        accounting (crossings, compute charge, drain) always prices the
+        REAL packed size, never the bucket."""
+        b = 1
+        while b < n:
+            b <<= 1
+        return min(b, self.max_batch)
 
     # -- worker thread (v10c) --------------------------------------------------------
 
@@ -222,13 +253,14 @@ class ServingEngine:
         # could make progress the request admits and the barrier waits.
         # deferral granularity is one engine step: admitting later means one
         # extra serialized step at the tail, so a window must be worth at
-        # least that much before deferring into it — priced with the live
-        # KV prefix, the same terms the step itself will charge
+        # least that much before deferring into it — priced off the READY
+        # set (the slots that would actually step now), with per-slot KV
+        # prefixes, the same terms the step itself will charge.  A resident
+        # slot whose own restore is still draining does not step and must
+        # not inflate the admission price; with nothing ready the next step
+        # pays a barrier, not a forward, and the cost is honestly zero.
         if self.compute is not None:
-            kv = (float(np.mean([r.index for r in self.active.values()]))
-                  if self.active else 0.0)
-            step_cost = self.compute.decode_step_s(
-                max(1, len(self.active)), kv_len=kv)
+            step_cost = self.compute.decode_step_masked_s(self._ready_lens())
         else:
             step_cost = 0.0
         i = 0
@@ -245,6 +277,21 @@ class ServingEngine:
             slot = self.free_slots.pop()
             self._prefill_into_slot(req, slot)
             admitted = True
+
+    def _ready_lens(self) -> list:
+        """Per-slot KV lengths of the resident slots that would step now.
+
+        The masked-aware admission price: with slot masking active and
+        restores in flight, only the ready slots' lengths count; otherwise
+        every resident slot steps.  Empty when nothing would step — the
+        phantom-charge fix makes the resulting price exactly zero."""
+        if not self.active:
+            return []
+        if self.defaults.slot_masked_decode and self.overlap.pending:
+            key_of = {s: r.request_id for s, r in self.active.items()}
+            mask = self.overlap.ready_mask(key_of)
+            return [float(r.index) for s, r in self.active.items() if mask[s]]
+        return [float(r.index) for r in self.active.values()]
 
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
         if self.obs is not None:
@@ -387,6 +434,13 @@ class ServingEngine:
         still draining are masked out of the step (``_ready_slots``): prep
         bytes, the compute charge and the drain cover only the ready subset,
         while deferred slots stay resident and rejoin next step.
+
+        With ``packed_decode`` on (the default), the step executes over a
+        packed ragged batch of exactly the ready slots (``_step_packed``):
+        prep crossings, the forward, the compute charge and the drain are
+        all sized to the packed set instead of a dense batch padded to
+        ``max_batch``.  Token streams are byte-identical to the dense path
+        under greedy decode.
         """
         self._admit()
         if not self.active:
@@ -394,6 +448,16 @@ class ServingEngine:
         self.step_count += 1
         slots = sorted(self.active)
         ready, deferred = self._ready_slots(slots)
+        if self.defaults.packed_decode:
+            return self._step_packed(slots, ready, deferred)
+        return self._step_dense(slots, ready, deferred)
+
+    def _step_dense(self, slots: list, ready: list, deferred: list) -> int:
+        """Legacy dense decode step: the forward always runs at the fixed
+        ``max_batch`` width, with non-resident rows as zero padding and
+        deferred rows as idempotent rewrites.  Kept as the
+        ``packed_decode=False`` path and as the reference the packed path's
+        token-identity guarantee is stated against."""
         b = self.max_batch
 
         # every resident slot feeds the forward (the jitted step is a fixed
@@ -412,36 +476,9 @@ class ServingEngine:
         # mask-aware: per-slot prep covers only the slots actually stepping
         small_inputs = [tokens, index] + [
             np.zeros((len(ready),), np.int32) for _ in range(4)]
-        if self.coalescer is not None:
-            # bridge_opt: uploads queue and flush fused across steps
-            prep_class = (oc.ALLOC_H2D
-                          if self.policy is SchedulingPolicy.ASYNC_OVERLAP
-                          else oc.PREP_BATCHED_H2D)
-            for arr in small_inputs:
-                self.coalescer.h2d(arr, op_class=prep_class)
-        elif self.policy is SchedulingPolicy.ASYNC_OVERLAP:
-            # vLLM async path: fresh pinned staging per step (the 44x class)
-            for arr in small_inputs:
-                self.gateway.h2d(arr, op_class=oc.ALLOC_H2D, reuse_staging=False)
-        else:
-            self.gateway.batch_h2d(small_inputs, op_class=oc.PREP_BATCHED_H2D)
+        self._emit_prep(small_inputs)
 
-        # a decode step reads every stepping slot's KV: any restore still in
-        # flight for a stepping request must land first (PipeLLM barrier) —
-        # requests not reading restored KV never pay this.  With slot
-        # masking on, _ready_slots already resolved the stepping slots'
-        # restores (and deferred the rest), so this whole-batch barrier is
-        # the legacy flag-off path.
-        if not self.defaults.slot_masked_decode and self.overlap.pending:
-            waited = 0.0
-            for s in slots:
-                w = self.overlap.restore_barrier(self.active[s].request_id)
-                if w and self.obs is not None:
-                    self.obs.spans.on_restore_wait(
-                        self.active[s].request_id, w)
-                waited += w
-            if waited and self.coalescer is not None:
-                self.coalescer.poll()   # the barrier wait moved the clock
+        self._whole_batch_barrier(slots)
 
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(tokens), jnp.asarray(index))
@@ -484,21 +521,7 @@ class ServingEngine:
         # guarantee
         drain_tokens = (next_tokens[jnp.asarray(np.asarray(ready, np.int32))]
                         if deferred else next_tokens)
-        if self.coalescer is not None:
-            # bridge_opt: token values land now (they stay usable on-device
-            # for the next step); the drain's toll joins the fused flush
-            host_tokens = self.coalescer.d2h(drain_tokens, op_class=oc.DRAIN_D2H)
-        elif self.policy is SchedulingPolicy.WORKER_DRAIN:
-            done = threading.Event()
-            result = {}
-            self._drain_q.put((drain_tokens, lambda h: (result.update(h=h),
-                                                        done.set())))
-            done.wait()
-            host_tokens = result["h"]
-        else:
-            op = (oc.DRAIN_D2H_NONBLOCKING
-                  if self.policy is SchedulingPolicy.ASYNC_OVERLAP else oc.DRAIN_D2H)
-            host_tokens = self.gateway.d2h(drain_tokens, op_class=op)
+        host_tokens = self._drain(drain_tokens)
 
         self.trace.append(StepTrace(
             step=self.step_count, active=len(ready),
@@ -508,10 +531,153 @@ class ServingEngine:
             policy=self.policy.value, virtual_t=self.clock.now,
             deferred=len(deferred)))
 
-        host = np.asarray(host_tokens)
+        self._consume(ready, np.asarray(host_tokens),
+                      by_position=bool(deferred))
+        if self.coalescer is not None:
+            # compute moved the clock this step: let aged queues meet their
+            # deadline now instead of waiting for the next submission
+            self.coalescer.poll()
+        return len(ready)
+
+    def _step_packed(self, slots: list, ready: list, deferred: list) -> int:
+        """Packed ragged decode step (DESIGN.md §10, the default path).
+
+        The step executes over exactly the ready slots: a ``RaggedBatch``
+        names the packed rows and their per-slot KV lengths, the forward
+        gathers those rows out of the resident cache, decodes at the packed
+        width, and scatters the updated rows back.  Prep crossings, the
+        compute charge (``DECODE_PACKED``, priced per slot KV length — the
+        same terms as the masked charge, which the parity property pins)
+        and the drain all cover the packed set and nothing else, so a
+        half-empty engine stops shipping ``max_batch``-shaped bytes across
+        the bridge and billing phantom lanes.  Under greedy decode the
+        token stream is byte-identical to the dense path: rows are
+        batch-independent and consume in the same ascending slot order.
+        """
+        batch = RaggedBatch.from_slots(
+            [(s, self.active[s].index) for s in ready])
+        n = batch.size
+        tokens = np.asarray(
+            [[self.active[s].output_tokens[-1]] for s in ready], np.int32)
+        index = np.asarray(batch.kv_lens, np.int32)
+
+        # --- input prep crossings: sized to the packed set, never max_batch
+        small_inputs = [tokens, index] + [
+            np.zeros((n,), np.int32) for _ in range(4)]
+        self._emit_prep(small_inputs)
+        self._whole_batch_barrier(slots)
+
+        # --- packed forward at the bucketed width.  Pad rows (if any)
+        # duplicate the first packed slot: the duplicate scatter writes
+        # carry identical values, so bucketing is invisible to state —
+        # and ALL accounting above/below prices the real size n.
+        width = self._bucket(n)
+        exec_slots, exec_tokens, exec_index = batch.slot_array(), tokens, index
+        if width > n:
+            pad = width - n
+            exec_slots = np.concatenate(
+                [exec_slots, np.repeat(exec_slots[:1], pad)])
+            exec_tokens = np.concatenate(
+                [tokens, np.repeat(tokens[:1], pad, axis=0)])
+            exec_index = np.concatenate([index, np.repeat(index[:1], pad)])
+        logits, self.caches = self._packed_decode(
+            self.params, self.caches, jnp.asarray(exec_tokens),
+            jnp.asarray(exec_index), jnp.asarray(exec_slots))
+
+        if self.compute is not None:
+            charge = self.compute.decode_charge_packed(
+                [float(k) for k in batch.kv_lens])
+            # one PACKED per packed step, one DEFERRED per slot it deferred
+            # (mirroring the MASKED/DEFERRED tag convention)
+            self.gateway.charge_compute(
+                charge.seconds, op_class=oc.DECODE_PACKED,
+                tags=(oc.PACKED,) + (oc.DEFERRED,) * len(deferred),
+                bound=charge.bound)
+        self.key, sk = jax.random.split(self.key)
+        # sampling params come from the lowest *resident* slot — the dense
+        # path's mask-independent convention, kept so packed vs dense can
+        # never disagree on which request's params price the batch
+        next_tokens = sample(logits[:n], sk, self.active[slots[0]].sampling)
+
+        # --- output drain: exactly the packed rows, nothing else
+        host_tokens = self._drain(next_tokens)
+
+        self.trace.append(StepTrace(
+            step=self.step_count, active=n,
+            prep_crossings=len(small_inputs),
+            prep_bytes=sum(a.nbytes for a in small_inputs),
+            drain_bytes=int(np.asarray(host_tokens).nbytes),
+            policy=self.policy.value, virtual_t=self.clock.now,
+            deferred=len(deferred), packed=n))
+
+        self._consume(ready, np.asarray(host_tokens), by_position=True)
+        if self.coalescer is not None:
+            self.coalescer.poll()
+        return n
+
+    # -- shared step plumbing (dense + packed) -----------------------------------------
+
+    def _emit_prep(self, small_inputs: list) -> None:
+        """Upload one step's small input arrays under the active policy:
+        coalesced (bridge_opt), fresh-staging per array (async — the 44x
+        class), or one batched registered crossing (sync/worker)."""
+        if self.coalescer is not None:
+            prep_class = (oc.ALLOC_H2D
+                          if self.policy is SchedulingPolicy.ASYNC_OVERLAP
+                          else oc.PREP_BATCHED_H2D)
+            for arr in small_inputs:
+                self.coalescer.h2d(arr, op_class=prep_class)
+        elif self.policy is SchedulingPolicy.ASYNC_OVERLAP:
+            for arr in small_inputs:
+                self.gateway.h2d(arr, op_class=oc.ALLOC_H2D,
+                                 reuse_staging=False)
+        else:
+            self.gateway.batch_h2d(small_inputs, op_class=oc.PREP_BATCHED_H2D)
+
+    def _whole_batch_barrier(self, slots: list) -> None:
+        """Legacy flag-off restore barrier: a decode step reads every
+        stepping slot's KV, so any restore still in flight must land first
+        (PipeLLM law).  With slot masking on, ``_ready_slots`` already
+        resolved the stepping slots' restores — this is a no-op."""
+        if self.defaults.slot_masked_decode or not self.overlap.pending:
+            return
+        waited = 0.0
+        for s in slots:
+            w = self.overlap.restore_barrier(self.active[s].request_id)
+            if w and self.obs is not None:
+                self.obs.spans.on_restore_wait(self.active[s].request_id, w)
+            waited += w
+        if waited and self.coalescer is not None:
+            self.coalescer.poll()   # the barrier wait moved the clock
+
+    def _drain(self, drain_tokens) -> Any:
+        """Drain one step's sampled tokens to the host under the active
+        policy (the policy-defining crossing)."""
+        if self.coalescer is not None:
+            # bridge_opt: token values land now (they stay usable on-device
+            # for the next step); the drain's toll joins the fused flush
+            return self.coalescer.d2h(drain_tokens, op_class=oc.DRAIN_D2H)
+        if self.policy is SchedulingPolicy.WORKER_DRAIN:
+            done = threading.Event()
+            result = {}
+            self._drain_q.put((drain_tokens, lambda h: (result.update(h=h),
+                                                        done.set())))
+            done.wait()
+            return result["h"]
+        op = (oc.DRAIN_D2H_NONBLOCKING
+              if self.policy is SchedulingPolicy.ASYNC_OVERLAP
+              else oc.DRAIN_D2H)
+        return self.gateway.d2h(drain_tokens, op_class=op)
+
+    def _consume(self, ready: list, host: np.ndarray, *,
+                 by_position: bool) -> None:
+        """Append each ready slot's drained token and retire finished
+        requests.  ``by_position`` indexes ``host`` by packed row position
+        (packed steps, masked dense steps); otherwise by slot id (full
+        dense steps, where the drain carried all ``max_batch`` rows)."""
         for pos, s in enumerate(ready):
             req = self.active[s]
-            tok = int(host[pos] if deferred else host[s])
+            tok = int(host[pos] if by_position else host[s])
             req.output_tokens.append(tok)
             if self.obs is not None:
                 self.obs.spans.on_token(req.request_id, self.clock.now)
@@ -521,11 +687,6 @@ class ServingEngine:
             if (len(req.output_tokens) >= sp.max_new_tokens
                     or tok == sp.stop_token or req.index >= self.max_len - 1):
                 self._release(req)
-        if self.coalescer is not None:
-            # compute moved the clock this step: let aged queues meet their
-            # deadline now instead of waiting for the next submission
-            self.coalescer.poll()
-        return len(ready)
 
     def run(self, max_steps: int = 10_000) -> dict:
         steps = 0

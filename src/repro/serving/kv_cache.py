@@ -9,13 +9,22 @@ The engine can run in two cache modes:
   * "slots"  — contiguous per-slot caches via models.model.init_cache
                (used for CPU integration tests; exact wrt the model)
   * "paged"  — this pool + the Pallas paged kernel (the production mode)
+
+Packed ragged decode (DESIGN.md §10) lives here too: ``RaggedBatch``
+describes one step's packed ready set (slot ids + per-slot KV lengths, no
+padding), and ``gather_slot_cache``/``scatter_slot_cache`` move exactly
+those slots' cache rows in and out of the full-resident cache tree so the
+forward runs over a packed batch instead of a dense one padded to
+``max_batch``.  TensorRT-LLM's ``gpt_attention.md`` argues packed
+(non-padded) batching is strictly better; the ragged block-table export
+(``ragged_block_tables``) is the paged-kernel shape of the same idea.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -123,4 +132,116 @@ def block_table_array(tables: dict[str, list[int]], order: list[str],
     for i, rid in enumerate(order):
         t = tables[rid][:pages_max]
         out[i, :len(t)] = t
+    return out
+
+
+def ragged_block_tables(tables: dict[str, list[int]],
+                        order: list[str]) -> tuple[np.ndarray, np.ndarray]:
+    """Packed (non-padded) block-table batch: one flat int32 page-id vector
+    plus (B+1,) int32 row offsets (CSR-style), the paged-kernel shape of a
+    ragged batch.  Total size is the pages actually allocated — a dense
+    table pads every row to the widest request and ships the padding across
+    the bridge with it."""
+    flat: list[int] = []
+    offsets = np.zeros(len(order) + 1, np.int32)
+    for i, rid in enumerate(order):
+        t = tables[rid]
+        flat.extend(t)
+        offsets[i + 1] = offsets[i] + len(t)
+    return np.asarray(flat, np.int32), offsets
+
+
+# ---------------------------------------------------------------------------------
+# Packed ragged decode (DESIGN.md §10)
+# ---------------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RaggedBatch:
+    """One packed decode step's ready set: slot ids + per-slot KV lengths.
+
+    No padding anywhere: ``size`` is exactly the number of rows the forward
+    executes, ``kv_lens`` are the per-slot prefix depths the pricing reads
+    (``ComputeModel.decode_charge_packed``), and ``total_kv_tokens`` is the
+    step's KV read traffic in tokens.  Slots keep engine order (ascending),
+    so row ``i`` of the packed batch is slot ``slots[i]`` — the scatter back
+    into the resident cache and the per-row token drain both key on that.
+    """
+
+    slots: tuple[int, ...]
+    kv_lens: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.slots) != len(self.kv_lens):
+            raise ValueError(
+                f"ragged batch needs one kv_len per slot: "
+                f"{len(self.slots)} slots vs {len(self.kv_lens)} lens")
+
+    @classmethod
+    def from_slots(cls, pairs: Sequence[tuple[int, int]]) -> "RaggedBatch":
+        """Build from (slot, kv_len) pairs, preserving caller order."""
+        return cls(slots=tuple(int(s) for s, _ in pairs),
+                   kv_lens=tuple(int(k) for _, k in pairs))
+
+    @property
+    def size(self) -> int:
+        return len(self.slots)
+
+    @property
+    def total_kv_tokens(self) -> int:
+        return int(sum(self.kv_lens))
+
+    def offsets(self) -> np.ndarray:
+        """CSR-style (size+1,) cumulative KV offsets of the packed rows."""
+        out = np.zeros(self.size + 1, np.int64)
+        np.cumsum(np.asarray(self.kv_lens, np.int64), out=out[1:])
+        return out
+
+    def slot_array(self) -> np.ndarray:
+        return np.asarray(self.slots, np.int32)
+
+
+def _walk_cache(tree, fn, *rest):
+    """Apply ``fn`` to every leaf of a slot cache tree (dict/list nesting —
+    the same structure ``models.model.init_cache`` builds)."""
+    if isinstance(tree, dict):
+        return {k: _walk_cache(tree[k], fn, *(r[k] for r in rest))
+                for k in tree}
+    if isinstance(tree, list):
+        return [_walk_cache(t, fn, *r) for t, *r in zip(tree, *rest)]
+    return fn(tree, *rest)
+
+
+def gather_slot_cache(caches: dict, slots, *, scan_layers: bool) -> dict:
+    """Packed view of ``slots``' rows from the full resident cache tree.
+
+    The slot axis is 0 for per-layer leaves and 1 for scan-stacked
+    ``blocks`` leaves — the same rule the engine's prefill insertion uses,
+    so the two stay structurally consistent by construction.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for key, sub in caches.items():
+        stacked = scan_layers and key == "blocks"
+        take = ((lambda a: a[:, slots]) if stacked
+                else (lambda a: a[slots]))
+        out[key] = _walk_cache(sub, take)
+    return out
+
+
+def scatter_slot_cache(caches: dict, packed: dict, slots, *,
+                       scan_layers: bool) -> dict:
+    """Write a packed cache tree's rows back into the resident tree at
+    ``slots``.  Duplicate slot ids are allowed only when their rows carry
+    identical values (the bucket-padding case: pad rows duplicate a real
+    slot and recompute the identical update)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for key, sub in caches.items():
+        stacked = scan_layers and key == "blocks"
+        put = ((lambda full, one: full.at[:, slots].set(
+                    one.astype(full.dtype))) if stacked
+               else (lambda full, one: full.at[slots].set(
+                    one.astype(full.dtype))))
+        out[key] = _walk_cache(sub, put, packed[key])
     return out

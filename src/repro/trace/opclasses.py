@@ -52,6 +52,13 @@ DECODE_COMPUTE = "decode_compute"
 #: one.  A separate class from DECODE_COMPUTE so tapes distinguish masked
 #: steps — replay and attribution must not average the two shapes together.
 DECODE_MASKED = "decode_masked"
+#: a packed ragged decode step's compute (DESIGN.md §10): the forward ran
+#: over exactly the packed ready rows — no dense padding to the widest slot
+#: set — priced per slot-KV-length like DECODE_MASKED (the two charge
+#: identically for equal lengths; the parity property pins it).  A separate
+#: class so tapes distinguish packed execution from the dense/masked legacy
+#: shapes in attribution and replay.
+DECODE_PACKED = "decode_packed"
 #: prompt-processing compute at admission (cold tokens only — restored/warm
 #: prefix tokens skip the forward and therefore the charge)
 PREFILL_COMPUTE = "prefill_compute"
@@ -67,6 +74,15 @@ ARENA_MISS = "arena_miss"
 #: carries neither.
 MASKED = "masked"
 DEFERRED = "deferred"
+#: packed ragged decode tags on DECODE_PACKED compute records: PACKED once
+#: per packed step; DEFERRED (above) once per slot that step deferred — so
+#: tag counts read as (packed steps, deferred slot-steps), mirroring the
+#: MASKED/DEFERRED convention.
+PACKED = "packed"
+#: compute op classes (kind == "compute" records) — the canonical set for
+#: attribution and replay summaries that enumerate compute classes
+COMPUTE_CLASSES = frozenset({DECODE_COMPUTE, DECODE_MASKED, DECODE_PACKED,
+                             PREFILL_COMPUTE})
 
 #: classes whose crossings are per-step input preparation (candidates for
 #: batching into one registered crossing in a counterfactual replay).  The

@@ -113,7 +113,9 @@ class TestComputeOnClockAndTape:
         tape = rec.tape()
         mix = tape.op_class_mix()
         assert mix.get(oc.PREFILL_COMPUTE, 0) == 1
-        assert mix.get(oc.DECODE_COMPUTE, 0) == eng.step_count
+        # the default engine decodes packed (DESIGN.md §10): every decode
+        # step's compute lands as a DECODE_PACKED record
+        assert mix.get(oc.DECODE_PACKED, 0) == eng.step_count
         assert tape.compute_seconds() > 0.0
         # virtual time covers bridge + compute; stats agree with the tape
         st = eng.stats()

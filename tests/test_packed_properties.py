@@ -1,0 +1,98 @@
+"""Property-based tests for the unified step-pricing roofline.
+
+The parity that makes "one roofline, three entry points" safe to rely on:
+for ANY batch size and KV depth, ``decode_charge_masked([k]*b)`` is exactly
+``decode_charge(b, kv_len=k)``, and the packed charge is exactly the masked
+charge for equal per-slot lengths — so the engine's dense, masked and
+packed paths can never drift apart in pricing, only in which rows they
+price.  Plus the phantom-charge law (empty set => exactly zero) and the
+monotonicity that keeps admission deferral sane (more KV never gets
+cheaper).
+"""
+
+import dataclasses
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs.base import get_config
+from repro.core.bridge import B300, TPU_V5E, BridgeModel
+from repro.core.compute import ComputeModel
+from repro.serving.kv_cache import RaggedBatch
+
+CM = ComputeModel(get_config("qwen3p6-27b"), BridgeModel(B300, cc_on=True))
+CM_OFF = ComputeModel(get_config("qwen1.5-4b"), BridgeModel(TPU_V5E,
+                                                            cc_on=False))
+
+kv_lens = st.lists(st.floats(min_value=0.0, max_value=65536.0,
+                             allow_nan=False, allow_infinity=False),
+                   min_size=0, max_size=256)
+
+
+@pytest.mark.parametrize("cm", [CM, CM_OFF], ids=["b300-on", "v5e-off"])
+@settings(max_examples=200, deadline=None)
+@given(batch=st.integers(min_value=1, max_value=4096),
+       kv=st.floats(min_value=0.0, max_value=65536.0, allow_nan=False))
+def test_masked_equals_dense_for_uniform_lengths(cm, batch, kv):
+    masked = cm.decode_charge_masked([kv] * batch)
+    dense = cm.decode_charge(batch, kv_len=kv)
+    assert masked.flops == dense.flops
+    assert masked.hbm_bytes == pytest.approx(dense.hbm_bytes, rel=1e-12)
+    assert masked.seconds == pytest.approx(dense.seconds, rel=1e-12)
+    assert masked.bound == dense.bound
+
+
+@pytest.mark.parametrize("cm", [CM, CM_OFF], ids=["b300-on", "v5e-off"])
+@settings(max_examples=200, deadline=None)
+@given(lens=kv_lens)
+def test_packed_equals_masked_for_equal_lengths(cm, lens):
+    assert cm.decode_charge_packed(lens) == cm.decode_charge_masked(lens)
+
+
+@settings(max_examples=100, deadline=None)
+@given(lens=kv_lens)
+def test_empty_is_zero_nonempty_is_positive(lens):
+    charge = CM.decode_charge_packed(lens)
+    if not lens:
+        assert charge.seconds == charge.flops == charge.hbm_bytes == 0.0
+    else:
+        assert charge.seconds > 0.0
+        assert charge.flops > 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(lens=kv_lens.filter(bool),
+       extra=st.floats(min_value=1.0, max_value=65536.0, allow_nan=False))
+def test_more_kv_never_cheaper(lens, extra):
+    """Monotonicity: growing any slot's prefix (or adding a slot) can only
+    add HBM traffic — the admission price never drops as work grows."""
+    base = CM.decode_charge_packed(lens)
+    deeper = CM.decode_charge_packed([lens[0] + extra] + lens[1:])
+    wider = CM.decode_charge_packed(lens + [extra])
+    assert deeper.seconds >= base.seconds
+    assert wider.seconds >= base.seconds
+
+
+@settings(max_examples=100, deadline=None)
+@given(lens=kv_lens)
+def test_pricing_is_permutation_invariant(lens):
+    """Packed pricing reads the KV *sum*: slot order cannot matter."""
+    assert (CM.decode_charge_packed(list(reversed(lens)))
+            == CM.decode_charge_packed(lens))
+
+
+@settings(max_examples=100, deadline=None)
+@given(pairs=st.lists(st.tuples(st.integers(min_value=0, max_value=511),
+                                st.integers(min_value=0, max_value=65536)),
+                      min_size=0, max_size=64))
+def test_ragged_batch_invariants(pairs):
+    batch = RaggedBatch.from_slots(pairs)
+    assert batch.size == len(pairs)
+    assert batch.total_kv_tokens == sum(k for _, k in pairs)
+    offs = batch.offsets()
+    assert offs[0] == 0 and offs[-1] == batch.total_kv_tokens
+    assert all(offs[i] <= offs[i + 1] for i in range(batch.size))
+    assert list(batch.slot_array()) == [s for s, _ in pairs]

@@ -48,6 +48,11 @@ def tiny_model():
 
 
 def _defaults(**overrides):
+    # this file pins the legacy masked/dense step semantics (DECODE_MASKED
+    # vs DECODE_COMPUTE records, dense prep/drain shapes), so the engines
+    # here run with packed ragged decode off; the packed path has its own
+    # suite (test_packed_decode.py) including packed-vs-masked parity
+    overrides.setdefault("packed_decode", False)
     return dataclasses.replace(cc_aware_defaults(True, concurrency=4),
                                **overrides)
 
