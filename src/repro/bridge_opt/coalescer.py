@@ -76,6 +76,8 @@ class CoalescerStats:
     worker_flushes: int = 0
     #: engine-clock seconds charged for worker flush handoffs
     worker_handoff_s: float = 0.0
+    #: degradation-ladder bypass entries (each entry barrier-flushed first)
+    bypass_entries: int = 0
     #: poll() calls by source ("clock" = ordinary after-charge polls;
     #: "deferral" = slot-masked decode polling after a step deferred slots,
     #: so a deferred slot's queued flushes keep aging — DESIGN.md §8)
@@ -124,7 +126,22 @@ class CrossingCoalescer:
             Direction.H2D: [], Direction.D2H: []}
         #: directions whose flush buffer exists (no-arena staging machine)
         self._flush_buffer_registered: set[Direction] = set()
+        #: degradation-ladder bypass (DESIGN.md §11): while set, every
+        #: submission takes the passthrough path — a fused flush is one
+        #: ciphertext, so under MAC-reject pressure any constituent failure
+        #: re-pays the whole flush; bypassed crossings retry only themselves
+        self.bypass = False
         self.stats = CoalescerStats()
+
+    def set_bypass(self, on: bool) -> float:
+        """Enter/leave coalescer bypass; entering drains both queues with a
+        barrier flush first so no queued crossing is stranded un-aged."""
+        charged = 0.0
+        if on and not self.bypass:
+            charged = self.barrier()
+            self.stats.bypass_entries += 1
+        self.bypass = bool(on)
+        return charged
 
     # -- queue views -------------------------------------------------------------------
 
@@ -142,7 +159,7 @@ class CrossingCoalescer:
         """Host-to-device: real transfer now, bridge charge deferred if small."""
         arr = np.asarray(host_array)
         nbytes = int(arr.nbytes)
-        if nbytes > self.threshold_bytes:
+        if self.bypass or nbytes > self.threshold_bytes:
             self.stats.passthrough += 1
             self.stats.passthrough_bytes += nbytes
             dev = self.gateway.h2d(arr, op_class=op_class, reuse_staging=True)
@@ -159,7 +176,7 @@ class CrossingCoalescer:
         # on whichever path the threshold picks
         nbytes = (int(device_array.nbytes) if hasattr(device_array, "nbytes")
                   else int(np.asarray(device_array).nbytes))
-        if nbytes > self.threshold_bytes:
+        if self.bypass or nbytes > self.threshold_bytes:
             self.stats.passthrough += 1
             self.stats.passthrough_bytes += nbytes
             host = self.gateway.d2h(device_array, op_class=op_class)
@@ -172,7 +189,7 @@ class CrossingCoalescer:
     def charge(self, nbytes: int, direction: Direction, *, op_class: str) -> None:
         """Metadata-only submission (offload spills): no payload moves here."""
         nbytes = int(nbytes)
-        if nbytes > self.threshold_bytes:
+        if self.bypass or nbytes > self.threshold_bytes:
             self.stats.passthrough += 1
             self.stats.passthrough_bytes += nbytes
             self.gateway.charge_crossing(nbytes, direction, op_class=op_class)

@@ -48,6 +48,7 @@ class PipelinedRestoreResult:
 def pipelined_h2d(gateway: "TransferGateway", payloads: Sequence[np.ndarray], *,
                   chunk_bytes: int,
                   op_class: str = oc.KV_RESTORE_PIPELINED,
+                  tags: tuple = (),
                   ) -> tuple[list[jax.Array], PipelinedRestoreResult]:
     """Move `payloads` host->device as chunked, double-buffered pool traffic.
 
@@ -73,7 +74,8 @@ def pipelined_h2d(gateway: "TransferGateway", payloads: Sequence[np.ndarray], *,
     last_done = t0
     for size in sizes:
         crossing = Crossing(size, Direction.H2D, StagingKind.REGISTERED)
-        _, _, done = gateway.pooled_crossing(crossing, op_class=op_class)
+        _, _, done = gateway.pooled_crossing(crossing, op_class=op_class,
+                                             tags=tags)
         if first_done is None:
             first_done = done
         last_done = max(last_done, done)

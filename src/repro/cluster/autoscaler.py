@@ -17,7 +17,7 @@ import enum
 from dataclasses import dataclass
 from typing import Optional
 
-from .budget import SecureContextBudget
+from .budget import BudgetExhausted, SecureContextBudget
 from .replica import ReplicaMetrics
 
 
@@ -39,6 +39,12 @@ class AutoscalerConfig:
     #: fraction of virtual time spent in crossings above which the fleet
     #: counts as bridge-bound
     bridge_bound_fraction: float = 0.5
+    # ---- replacement spawns (resilience, DESIGN.md §11) ------------------
+    #: first backoff after a budget-rejected spawn (doubles per consecutive
+    #: failure, capped below) — the anti-spin-loop guard: a scaler whose
+    #: spawn keeps hitting BudgetExhausted must wait, not hammer the budget
+    spawn_backoff_s: float = 1.0
+    max_spawn_backoff_s: float = 60.0
 
 
 class Autoscaler:
@@ -53,6 +59,42 @@ class Autoscaler:
         #: BRIDGE_BOUND with bridge_fraction pinned high is the §4 L4 story
         self.registry = registry
         self.decisions: list[dict] = []
+        # ---- replacement-spawn backoff state (DESIGN.md §11) -------------
+        self.spawn_failures = 0
+        self.spawn_skipped = 0
+        self.spawns = 0
+        self._spawn_backoff_s = 0.0
+        self.spawn_backoff_until = 0.0
+
+    def try_spawn(self, spawn_fn, *, now: float):
+        """Attempt a replacement spawn without spin-looping on the budget.
+
+        ``spawn_fn`` provisions and returns the new replica (raising
+        :class:`BudgetExhausted` when the fleet's secure-context or pinned
+        budget has nothing left).  On rejection the scaler backs off
+        exponentially on the virtual clock — repeated calls inside the
+        backoff window are counted and skipped, never retried, so a failed
+        replacement can't hammer the budget every tick.  Returns the new
+        replica, or None (rejected or still backing off).
+        """
+        if now < self.spawn_backoff_until:
+            self.spawn_skipped += 1
+            return None
+        try:
+            replica = spawn_fn()
+        except BudgetExhausted:
+            self.spawn_failures += 1
+            self._spawn_backoff_s = min(
+                self.cfg.max_spawn_backoff_s,
+                max(self.cfg.spawn_backoff_s, 2.0 * self._spawn_backoff_s))
+            self.spawn_backoff_until = now + self._spawn_backoff_s
+            if self.registry is not None:
+                self.registry.counter("autoscaler/spawn_failures").inc()
+            return None
+        self.spawns += 1
+        self._spawn_backoff_s = 0.0
+        self.spawn_backoff_until = 0.0
+        return replica
 
     def evaluate(self, metrics: list[ReplicaMetrics]) -> dict:
         """One scaling decision from a fleet snapshot."""

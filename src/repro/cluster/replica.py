@@ -36,6 +36,7 @@ from repro.core.channels import VirtualClock
 from repro.core.fabric import Tenant
 from repro.core.gateway import TransferGateway
 from repro.core.policy import cc_aware_defaults
+from repro.resilience import FaultInjector, FaultPlan
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.kv_cache import PagePool
 from repro.serving.offload import OffloadManager
@@ -131,10 +132,17 @@ class ReplicaMetrics:
 
 
 class Replica:
+    #: router-visible health states (DESIGN.md §11)
+    HEALTHY = "healthy"
+    QUARANTINED = "quarantined"
+
     def __init__(self, replica_id: str, model, tenant: Tenant,
                  lease: ContextLease, bridge: BridgeModel,
                  cfg: Optional[ReplicaConfig] = None, *, seed: int = 0,
-                 pinned_lease: Optional[PinnedLease] = None):
+                 pinned_lease: Optional[PinnedLease] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 tenant_manager=None,
+                 context_budget=None, pinned_budget=None):
         self.replica_id = replica_id
         self.tenant = tenant
         self.lease = lease
@@ -206,6 +214,32 @@ class Replica:
         self._reaped = 0
         self.warm_blocks_restored = 0
         self.untracked_requests = 0
+        # ---- resilience (DESIGN.md §11) ----------------------------------
+        #: router-visible health: only HEALTHY + attested replicas are
+        #: eligible for new placements; quarantined replicas keep serving
+        #: what they already hold (no request is ever stranded by a state
+        #: flip — failover explicitly drains instead)
+        self.health = self.HEALTHY
+        self.health_reason = ""
+        #: attestation standing; provisioning already gated on it, so a
+        #: fresh replica starts attested with the TTL window opening now
+        self.attested = True
+        self.attested_at = self.clock.now
+        self.reattests = 0
+        self.quarantines = 0
+        #: control plane that re-verifies expired attestation (optional)
+        self.tenant_manager = tenant_manager
+        #: budgets to return this replica's leases to at close(); the router
+        #: also releases (release is idempotent) — belt and braces so a
+        #: replica closed outside a router still frees fleet resources
+        self.context_budget = context_budget
+        self.pinned_budget = pinned_budget
+        self.closed = False
+        #: seeded fault injection: hooks the gateway's charged submit paths
+        #: (None / empty plan = fault-free fast path, golden tapes unchanged)
+        self.faults: Optional[FaultInjector] = None
+        if fault_plan is not None and fault_plan.any_faults():
+            self.faults = FaultInjector(fault_plan).attach(self.gateway)
 
     # -- admission -------------------------------------------------------------------
 
@@ -286,9 +320,88 @@ class Replica:
     # -- serving loop ----------------------------------------------------------------
 
     def tick(self) -> int:
+        self._check_attestation()
         stepped = self.scheduler.tick()
         self._reap()
         return stepped
+
+    # -- resilience: health + attestation (DESIGN.md §11) ------------------------------
+
+    def routable(self) -> bool:
+        """Eligible for NEW placements (the router's health gate)."""
+        return self.health == self.HEALTHY and self.attested
+
+    def quarantine(self, reason: str) -> None:
+        """Mark the replica ineligible for new placements.
+
+        In-flight and queued work keeps serving — quarantine gates routing,
+        not execution, so a state flip can never hang a request.  Expired
+        attestation additionally drops ``attested`` until re-verification.
+        """
+        if self.health != self.QUARANTINED:
+            self.quarantines += 1
+        self.health = self.QUARANTINED
+        self.health_reason = reason
+        if reason == "attestation_expired":
+            self.attested = False
+
+    def mark_healthy(self) -> None:
+        """Operator/router recovery: re-admit the replica for placements."""
+        self.health = self.HEALTHY
+        self.health_reason = ""
+
+    def _check_attestation(self) -> None:
+        """Attestation TTL: expire -> quarantine -> re-attest -> healthy.
+
+        The re-attestation round trip is charged on the serving clock as a
+        tape-visible ``reattest`` record (the FaultInjector's emission), so
+        the toll shows up in stall attribution rather than vanishing into
+        control-plane accounting.  It only moves the clock — token streams
+        are unchanged, which keeps the chaos byte-identity invariant.
+        """
+        if self.faults is None:
+            return
+        if (self.health == self.HEALTHY
+                and self.faults.reattest_due(self.clock.now, self.attested_at)):
+            self.quarantine("attestation_expired")
+        if (self.health == self.QUARANTINED
+                and self.health_reason == "attestation_expired"):
+            self.faults.charge_reattest()
+            ok = True
+            if self.tenant_manager is not None:
+                ok = bool(self.tenant_manager.reattest(self.tenant)["ok"])
+            if ok:
+                self.attested = True
+                self.attested_at = self.clock.now
+                self.reattests += 1
+                self.mark_healthy()
+
+    def drain_requests(self) -> list[Request]:
+        """Failover: hand every queued + active request back to the caller.
+
+        Active requests go through the engine's preemption path (slot
+        freed, outputs cleared); the target replica re-runs prefill and
+        re-decodes greedily, so a moved request's *final* tokens match what
+        it would have produced here.  Source-side page tables and pending
+        restore completions are released — nothing leaks for a request that
+        left.
+        """
+        for slot in sorted(self.engine.active):
+            self.engine._release(self.engine.active[slot], state="queued")
+        drained = list(self.engine.queue)
+        self.engine.queue.clear()
+        for req in drained:
+            table = self._tables.pop(req.request_id, None)
+            if table is not None:
+                self.pages.release(table)
+            self._hashes.pop(req.request_id, None)
+            self.engine.overlap.pending.pop(req.request_id, None)
+            req.slot = -1
+            req.index = 0
+            req.first_token_t = None
+            req.warm_tokens = 0
+            req.state = "queued"
+        return drained
 
     def _reap(self) -> None:
         """Release finished requests' pages and evict their blocks through
@@ -307,8 +420,28 @@ class Replica:
         return len(self.engine.queue) + len(self.engine.active)
 
     def close(self) -> None:
+        """Release everything this replica holds from shared pools.
+
+        Idempotent.  Besides detaching the recorder and closing the engine,
+        this returns the page tables still tracked for live requests and
+        hands the context/pinned leases back to their budgets (when the
+        budgets were provided at spawn) — a spawn/close loop must leave the
+        fleet budgets at their initial high-water marks, or replacement
+        spawns eventually starve (the §4 L4 leak).
+        """
+        if self.closed:
+            return
+        self.closed = True
         self.recorder.detach()
         self.engine.close()
+        for table in self._tables.values():
+            self.pages.release(table)
+        self._tables.clear()
+        self._hashes.clear()
+        if self.context_budget is not None:
+            self.context_budget.release(self.lease.holder)
+        if self.pinned_budget is not None and self.pinned_lease is not None:
+            self.pinned_budget.release(self.pinned_lease.holder)
 
     def tape(self) -> BridgeTape:
         """This replica's crossing trace (replayable, conformance-checkable)."""
@@ -402,6 +535,13 @@ class Replica:
             preemptions=self.scheduler.preemptions,
             warm_blocks_restored=self.warm_blocks_restored,
             untracked_requests=self.untracked_requests,
+            # resilience (DESIGN.md §11)
+            health=self.health,
+            attested=self.attested,
+            reattests=self.reattests,
+            quarantines=self.quarantines,
+            faults=(self.faults.stats.snapshot()
+                    if self.faults is not None else None),
             offload=self.offload.stats,
             # staging economics: the cluster-level inventory of what the
             # persistent arena bought this replica (bridge_opt)

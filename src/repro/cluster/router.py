@@ -25,11 +25,13 @@ will serialize it — the fleet-level face of the §5.5 overlap scheduler.
 
 from __future__ import annotations
 
+import dataclasses
 import enum
 from typing import Optional
 
 from repro.core.bridge import TPU_V5E, BridgeModel, BridgeProfile
 from repro.obs import Observatory
+from repro.resilience import FaultPlan
 from repro.serving.engine import Request
 
 from .budget import PinnedBudget, SecureContextBudget
@@ -67,11 +69,28 @@ class ClusterRouter:
         #: per accepted request: {request, replica_id, affinity, warm_blocks}
         self.request_log: list[dict] = []
         self._rr = 0
+        # ---- resilience (DESIGN.md §11) ----------------------------------
+        #: fail_replica() invocations (drain-and-re-route failovers)
+        self.failovers = 0
+        #: drained requests re-placed on an eligible peer (KV re-restored
+        #: there via the normal warm-admission path)
+        self.failover_moved = 0
+        #: drained requests with no eligible peer, requeued on the source —
+        #: they serve after it recovers; a failover never loses a request
+        self.failover_requeued = 0
 
     # -- admission + dispatch ---------------------------------------------------------
 
     def queue_depth(self) -> int:
         return sum(r.pending() for r in self.replicas)
+
+    def _eligible(self) -> list[Replica]:
+        """Replicas the health gate admits for NEW placements: healthy and
+        attested.  Quarantined replicas keep serving what they hold but
+        receive nothing new until they recover (DESIGN.md §11).  Replicas
+        that export no health state (test doubles) count as eligible."""
+        return [r for r in self.replicas
+                if not callable(getattr(r, "routable", None)) or r.routable()]
 
     def submit(self, req: Request) -> Optional[Replica]:
         """Admit and place one request; None when the cluster sheds load."""
@@ -80,7 +99,7 @@ class ClusterRouter:
             return None
         hashes = prompt_prefix_hashes(req.prompt, self.block_tokens)
         replica, affinity, warm = self._route(hashes)
-        if not replica.submit(req, prefix_hashes=hashes):
+        if replica is None or not replica.submit(req, prefix_hashes=hashes):
             self.rejected += 1
             return None
         if affinity:
@@ -91,17 +110,22 @@ class ClusterRouter:
         })
         return replica
 
-    def _route(self, prefix_hashes: list[int]) -> tuple[Replica, bool, int]:
-        """Returns (replica, affinity_hit, warm_blocks at the chosen one)."""
+    def _route(self, prefix_hashes: list[int]
+               ) -> tuple[Optional[Replica], bool, int]:
+        """Returns (replica, affinity_hit, warm_blocks at the chosen one);
+        (None, False, 0) when no replica is currently eligible."""
+        candidates = self._eligible()
+        if not candidates:
+            return None, False, 0
         want = set(prefix_hashes)
         if self.routing is RoutingPolicy.PREFIX_AFFINITY and want:
-            overlaps = [len(want & r.kv_inventory()) for r in self.replicas]
+            overlaps = [len(want & r.kv_inventory()) for r in candidates]
             best = max(overlaps)
             if best > 0:
-                tied = [r for r, o in zip(self.replicas, overlaps) if o == best]
+                tied = [r for r, o in zip(candidates, overlaps) if o == best]
                 # among equally-warm replicas, pick the least loaded
                 return min(tied, key=lambda r: r.load_score()), True, best
-        replica = self._least_loaded()
+        replica = self._least_loaded(candidates)
         warm = len(want & replica.kv_inventory()) if want else 0
         return replica, False, warm
 
@@ -121,10 +145,12 @@ class ClusterRouter:
         share = getattr(replica, "overlap_noop_share", None)
         return float(share()) if callable(share) else 1.0
 
-    def _least_loaded(self) -> Replica:
-        scores = [r.load_score() for r in self.replicas]
+    def _least_loaded(self, candidates: Optional[list[Replica]] = None
+                      ) -> Replica:
+        pool = candidates if candidates is not None else self.replicas
+        scores = [r.load_score() for r in pool]
         best = min(scores)
-        tied = [r for r, s in zip(self.replicas, scores) if s <= best + 1e-12]
+        tied = [r for r, s in zip(pool, scores) if s <= best + 1e-12]
         if self.prefer_overlap_filled and len(tied) > 1:
             # overlap-aware preference: equally-loaded replicas are NOT
             # equal if one is already hiding restore drains under decode
@@ -135,6 +161,76 @@ class ClusterRouter:
         pick = tied[self._rr % len(tied)]
         self._rr += 1
         return pick
+
+    # -- failover (DESIGN.md §11) -----------------------------------------------------
+
+    def _replica(self, replica_id: str) -> Replica:
+        for r in self.replicas:
+            if r.replica_id == replica_id:
+                return r
+        raise KeyError(f"no replica {replica_id!r} in this cluster")
+
+    def fail_replica(self, replica_id: str, *,
+                     reason: str = "failure") -> dict:
+        """Quarantine a replica and drain-and-re-route its in-flight work.
+
+        Every drained request is re-placed through the normal routing +
+        admission path, so its warm prefix re-restores (KV re-restore on
+        the target) and its prefill re-prices there.  A request no eligible
+        peer will take is requeued on the source — it serves once the
+        replica recovers.  Either way, zero requests are lost.
+        """
+        source = self._replica(replica_id)
+        source.quarantine(reason)
+        drained = source.drain_requests()
+        moved = requeued = 0
+        for req in drained:
+            hashes = prompt_prefix_hashes(req.prompt, self.block_tokens)
+            target, affinity, warm = self._route(hashes)
+            if target is not None and target.submit(req, prefix_hashes=hashes):
+                if affinity:
+                    self.affinity_hits += 1
+                # re-point the request's log entry at its new home (one
+                # entry per request — ttfts() must not double-count movers)
+                for entry in reversed(self.request_log):
+                    if entry["request"] is req:
+                        entry.update(replica_id=target.replica_id,
+                                     affinity=affinity, warm_blocks=warm,
+                                     failover_from=replica_id)
+                        break
+                moved += 1
+            else:
+                # engine-level requeue bypasses the scheduler's shed gate:
+                # a failed-over request must never be dropped by its own
+                # rescue path
+                source.engine.submit(req)
+                requeued += 1
+        self.failovers += 1
+        self.failover_moved += moved
+        self.failover_requeued += requeued
+        return {"replica_id": replica_id, "reason": reason,
+                "drained": len(drained), "moved": moved,
+                "requeued": requeued}
+
+    def add_replica(self, replica: Replica) -> None:
+        """Join a replacement replica (autoscaler spawn) to the fleet."""
+        if replica.cfg.block_tokens != self.block_tokens:
+            raise ValueError(
+                "replacement replica's block_tokens "
+                f"({replica.cfg.block_tokens}) must match the fleet's "
+                f"({self.block_tokens}) — routing keys would diverge")
+        self.replicas.append(replica)
+
+    def remove_replica(self, replica_id: str) -> Replica:
+        """Retire a replica from the fleet (drain + quarantine first via
+        fail_replica; the caller owns close())."""
+        replica = self._replica(replica_id)
+        if replica.pending():
+            raise ValueError(
+                f"replica {replica_id!r} still holds {replica.pending()} "
+                "requests; fail_replica() first")
+        self.replicas.remove(replica)
+        return replica
 
     # -- serving loop -----------------------------------------------------------------
 
@@ -199,6 +295,10 @@ class ClusterRouter:
             "bridge_time_s": sum(s["bridge_time_s"] for s in per_replica),
             "rejected": self.rejected,
             "affinity_hits": self.affinity_hits,
+            "failovers": self.failovers,
+            "failover_moved": self.failover_moved,
+            "failover_requeued": self.failover_requeued,
+            "health": {r.replica_id: r.health for r in self.replicas},
             "warm_blocks_restored": sum(s["warm_blocks_restored"]
                                         for s in per_replica),
             "leased_contexts": [s["leased_contexts"] for s in per_replica],
@@ -217,6 +317,7 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
                   require_attestation: bool = True,
                   host_pinned_bytes: Optional[int] = None,
                   prefer_overlap_filled: bool = False,
+                  fault_plan: Optional[FaultPlan] = None,
                   seed: int = 0) -> ClusterRouter:
     """Provision a cluster: fabric tenants, fair-share context leases,
     pinned-arena leases from the host-wide pool, and one replica per tenant
@@ -226,6 +327,11 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
     replica's `staging_arena_bytes` is leased from it at spawn, and a fleet
     whose arenas over-subscribe the pool fails *here* (BudgetExhausted)
     instead of degrading at runtime.  None = unconstrained (legacy).
+
+    `fault_plan` arms seeded fault injection (DESIGN.md §11) on every
+    replica; replica i draws from an independent stream at
+    ``seed = fault_plan.seed + i`` so a fleet's faults decorrelate the way
+    independent channels do.  None = fault-free (the default fast path).
     """
     cfg = replica_cfg or ReplicaConfig()
     tm = TenantManager(profile, cc_on=cc_on)
@@ -239,8 +345,12 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
         lease = budget.acquire(f"replica-{i}", grants[i])
         pinned_lease = pinned.acquire(f"replica-{i}", cfg.staging_arena_bytes)
         bridge = BridgeModel(profile, cc_on=cc_on)
+        plan_i = (dataclasses.replace(fault_plan, seed=fault_plan.seed + i)
+                  if fault_plan is not None else None)
         replicas.append(Replica(f"replica-{i}", model, tenant, lease, bridge,
-                                cfg, seed=seed + i, pinned_lease=pinned_lease))
+                                cfg, seed=seed + i, pinned_lease=pinned_lease,
+                                fault_plan=plan_i, tenant_manager=tm,
+                                context_budget=budget, pinned_budget=pinned))
     return ClusterRouter(replicas, routing=routing,
                          max_cluster_queue=max_cluster_queue,
                          tenant_manager=tm, budget=budget,

@@ -57,6 +57,13 @@ class TenantManager:
         self.records: list[ProvisionRecord] = []
         #: cumulative fmpm -a/-d wall time (control plane, not serving path)
         self.control_plane_seconds = 0.0
+        #: re-attestation round trips served (DESIGN.md §11): attestation
+        #: evidence carries a TTL under the resilience model; an expired
+        #: replica quarantines until this re-verification passes.  The
+        #: serving-clock cost of each round trip is charged by the replica's
+        #: FaultInjector (a tape-visible ``reattest`` record) — the ledger
+        #: here is the fleet-wide count.
+        self.reattests = 0
 
     # -- provisioning ----------------------------------------------------------------
 
@@ -118,6 +125,17 @@ class TenantManager:
             "verified": ev.verified_claims(),
             "gap": ev.gap(),
         }
+
+    def reattest(self, tenant: Tenant) -> dict:
+        """Re-verify an active tenant whose attestation TTL lapsed.
+
+        Same claim set as provisioning-time attestation — expiry does not
+        weaken the policy.  Returns the attest report; the caller (Replica)
+        stays quarantined unless ``report["ok"]``.
+        """
+        report = self.attest(tenant)
+        self.reattests += 1
+        return report
 
     def isolation_report(self) -> dict:
         """Concurrent-tenant isolation check (§7.1) across active tenants."""

@@ -89,6 +89,11 @@ class PoolStats:
     critical_path_lifecycle: float = 0.0   # lifecycle cost paid on the critical path
     crossings: int = 0
     bytes_moved: int = 0
+    #: fault-recovery context replacements (resilience.FaultInjector); the
+    #: setup toll is charged by the injector's chan_reestablish record, not
+    #: by the pool, so created/destroyed counters stay lifecycle-accurate
+    #: while critical_path_lifecycle excludes the recovery path
+    reestablished: int = 0
 
 
 class SecureChannelPool:
@@ -174,6 +179,24 @@ class SecureChannelPool:
             return  # per-use contexts created in submit()
         while len(self.active_contexts()) < self.n_workers:
             self._create_context(on_critical_path=not self._prewarmed)
+
+    def reestablish(self) -> int:
+        """Fault recovery: replace one secure context after session loss.
+
+        The oldest active context is torn down and a fresh one created in
+        its place.  Both legs run ``on_critical_path=False`` — the caller
+        (resilience.FaultInjector) charges the setup toll explicitly as a
+        ``chan_reestablish`` tape record, which keeps the toll visible to
+        stall attribution instead of buried in pool lifecycle accounting.
+        Returns the new context id.
+        """
+        active = self.active_contexts()
+        if active:
+            victim = min(active, key=lambda c: c.created_at)
+            self._destroy_context(victim, on_critical_path=False)
+        ctx = self._create_context(on_critical_path=False)
+        self.stats.reestablished += 1
+        return ctx.ctx_id
 
     def teardown(self, *, async_: bool = True) -> float:
         """Destroy all contexts; async teardown keeps it off the critical path.

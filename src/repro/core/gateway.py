@@ -77,7 +77,21 @@ class TransferGateway:
         #: optional bridge_opt.StagingArena — when attached, staging is a
         #: budgeted slab resource instead of the unbounded registered set
         self.arena = arena
+        #: optional resilience.FaultInjector — when attached (via its own
+        #: ``attach``), every charged crossing routes through the injector's
+        #: submit-path hook (brownout scaling, teardown, MAC-reject retries).
+        #: None means the fault-free fast path: zero extra work, golden tapes
+        #: unchanged.
+        self.faults: Optional[Any] = None
         self._staging_registered: set[tuple] = set()
+
+    def _faulted_cost(self, op_class: str, crossing: Crossing, cost: float, *,
+                      n_units: int = 1) -> float:
+        """Route a charged crossing through the fault injector, if any."""
+        if self.faults is None:
+            return cost
+        return self.faults.on_crossing(op_class, crossing, cost,
+                                       n_units=n_units)
 
     # -- staging discipline -----------------------------------------------------------
 
@@ -115,6 +129,7 @@ class TransferGateway:
                                            reuse_staging=reuse_staging)
         crossing = Crossing(int(arr.nbytes), Direction.H2D, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
+        cost = self._faulted_cost(op_class, crossing, cost)
         end = self.clock.advance(cost)
         self._record(crossing, cost, op_class, t_end=end, tags=tags)
         return jax.device_put(arr, self.device)
@@ -138,6 +153,7 @@ class TransferGateway:
             staging, tags = StagingKind.REGISTERED, ()
         crossing = Crossing(nbytes, Direction.D2H, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
+        cost = self._faulted_cost(op_class, crossing, cost)
         end = self.clock.advance(cost)
         self._record(crossing, cost, op_class, t_end=end, tags=tags)
         return np.asarray(device_array)
@@ -166,6 +182,9 @@ class TransferGateway:
             staging, tags = StagingKind.REGISTERED, ()
         crossing = Crossing(total, Direction.H2D, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
+        # one fused ciphertext: any constituent MAC reject re-pays the batch
+        cost = self._faulted_cost(op_class, crossing, cost,
+                                  n_units=len(host_arrays))
         end = self.clock.advance(cost)
         self._record(crossing, cost, op_class, t_end=end, tags=tags)
         self.stats.batched_crossings_saved += len(host_arrays) - 1
@@ -219,6 +238,9 @@ class TransferGateway:
         """
         crossing = Crossing(int(nbytes), direction, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
+        # a coalesced flush is one ciphertext over len(sources) constituents
+        cost = self._faulted_cost(op_class, crossing, cost,
+                                  n_units=max(1, len(sources)))
         end = self.clock.advance(cost)
         self._record(crossing, cost, op_class, t_end=end, tags=tags,
                      sources=sources)

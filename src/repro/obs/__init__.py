@@ -19,7 +19,8 @@ from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       SNAPSHOT_PERCENTILES, percentile)
 from .spans import Observatory, RequestSpan, SpanTracker
 from .stalls import (CAUSE_DEFERRED, CAUSE_FLUSH, CAUSE_FRESH,
-                     CAUSE_RESTORE, CAUSE_SERIAL, CAUSE_UNATTRIBUTED,
+                     CAUSE_REATTEST, CAUSE_REESTABLISH, CAUSE_RESTORE,
+                     CAUSE_RETRY, CAUSE_SERIAL, CAUSE_UNATTRIBUTED,
                      CAUSES, StallInterval, StallReport, attribute_stalls,
                      ladder_table)
 from .timeline import export_timeline, tape_to_trace_events
@@ -29,7 +30,8 @@ __all__ = [
     "SNAPSHOT_PERCENTILES", "percentile",
     "Observatory", "RequestSpan", "SpanTracker",
     "CAUSES", "CAUSE_DEFERRED", "CAUSE_FLUSH", "CAUSE_FRESH",
-    "CAUSE_RESTORE", "CAUSE_SERIAL", "CAUSE_UNATTRIBUTED",
+    "CAUSE_REATTEST", "CAUSE_REESTABLISH", "CAUSE_RESTORE", "CAUSE_RETRY",
+    "CAUSE_SERIAL", "CAUSE_UNATTRIBUTED",
     "StallInterval", "StallReport", "attribute_stalls", "ladder_table",
     "export_timeline", "tape_to_trace_events",
 ]

@@ -58,11 +58,18 @@ CAUSE_SERIAL = "channel_serialization"
 CAUSE_FLUSH = "coalescer_deadline_flush"
 CAUSE_RESTORE = "restore_barrier"
 CAUSE_DEFERRED = "deferred_slot"
+#: resilience causes (DESIGN.md §11): fault-recovery charges are first-class
+#: gap — a retry re-pays a crossing, a re-establishment re-pays the setup
+#: toll, a re-attestation re-pays the verifier round trip
+CAUSE_RETRY = "fault_retry"
+CAUSE_REESTABLISH = "chan_reestablish"
+CAUSE_REATTEST = "reattest"
 CAUSE_UNATTRIBUTED = "unattributed_idle"
 
 #: every cause, in report order
 CAUSES = (CAUSE_FRESH, CAUSE_SERIAL, CAUSE_FLUSH, CAUSE_RESTORE,
-          CAUSE_DEFERRED, CAUSE_UNATTRIBUTED)
+          CAUSE_DEFERRED, CAUSE_RETRY, CAUSE_REESTABLISH, CAUSE_REATTEST,
+          CAUSE_UNATTRIBUTED)
 
 #: uncharged traffic that means "a restore was in flight"
 _RESTORE_CLASSES = frozenset({oc.KV_RESTORE_H2D, oc.KV_RESTORE_PIPELINED})
@@ -150,6 +157,12 @@ def _fresh_toll_delta(profile_name: str, cc_on: bool) -> float:
 
 def _charged_cause(record) -> str:
     """Cause of a charged crossing's non-fresh remainder."""
+    if record.op_class == oc.CHAN_REESTABLISH:
+        return CAUSE_REESTABLISH
+    if record.op_class == oc.REATTEST:
+        return CAUSE_REATTEST
+    if oc.RETRY in record.tags:
+        return CAUSE_RETRY
     if (record.op_class in _COALESCED_CLASSES
             and DEADLINE_FLUSH_TAG in record.tags):
         return CAUSE_FLUSH

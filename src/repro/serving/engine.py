@@ -27,6 +27,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -158,6 +159,11 @@ class ServingEngine:
         self.step_count = 0
         self._worker: Optional[threading.Thread] = None
         self._drain_q: "queue.Queue" = queue.Queue()
+        #: worker-drain join deadline at close(); a thread that outlives it
+        #: is surfaced loudly (closed_dirty + RuntimeWarning) instead of
+        #: silently leaked — the PR 7 hang class must never pass quiet again
+        self.drain_join_timeout_s: float = 5.0
+        self.closed_dirty = False
         self._decode = jax.jit(
             lambda p, c, t, i: self.model.decode_step(p, c, t, i))
         # packed ragged decode (DESIGN.md §10): gather the packed rows out
@@ -217,7 +223,17 @@ class ServingEngine:
             self.coalescer.barrier()
         if self._worker is not None:
             self._drain_q.put(None)
-            self._worker.join(timeout=5)
+            self._worker.join(timeout=self.drain_join_timeout_s)
+            if self._worker.is_alive():
+                # a wedged drain thread means a crossing (and possibly a
+                # caller blocked on its callback) is stranded — make the
+                # dirty shutdown impossible to miss
+                self.closed_dirty = True
+                warnings.warn(
+                    f"ServingEngine.close(): worker drain thread failed to "
+                    f"join within {self.drain_join_timeout_s}s — a drain is "
+                    f"wedged and its crossing is stranded (closed_dirty=True)",
+                    RuntimeWarning, stacklevel=2)
             self._worker = None
 
     # -- request lifecycle -------------------------------------------------------------
@@ -380,6 +396,34 @@ class ServingEngine:
             if self.obs is not None:
                 self.obs.spans.on_preempt(req.request_id, self.clock.now)
 
+    # -- degradation ladder (resilience, DESIGN.md §11) --------------------------------
+
+    def _ladder(self):
+        """The fault injector's degradation ladder, when one is attached to
+        the gateway (duck-typed — the engine never imports resilience)."""
+        faults = getattr(self.gateway, "faults", None)
+        return faults.ladder if faults is not None else None
+
+    def _degraded_tags(self) -> tuple:
+        """DEGRADED on every compute charge while the ladder sits above
+        level 0 — the tape shows exactly which intervals ran degraded."""
+        ladder = self._ladder()
+        if ladder is not None and ladder.level > 0:
+            return (oc.DEGRADED,)
+        return ()
+
+    def _sync_ladder(self) -> None:
+        """Per-step ladder bookkeeping: recovery hysteresis on the virtual
+        clock, and the coalescer-bypass rung applied/released (entering
+        bypass barrier-flushes both queues so nothing is stranded)."""
+        ladder = self._ladder()
+        if ladder is None:
+            return
+        ladder.maybe_recover(self.clock.now)
+        if (self.coalescer is not None
+                and self.coalescer.bypass != ladder.coalescer_bypassed):
+            self.coalescer.set_bypass(ladder.coalescer_bypassed)
+
     # -- the decode step under each policy ------------------------------------------------
 
     def _ready_slots(self, slots: list) -> tuple[list, list]:
@@ -442,13 +486,17 @@ class ServingEngine:
         ``max_batch``.  Token streams are byte-identical to the dense path
         under greedy decode.
         """
+        self._sync_ladder()
         self._admit()
         if not self.active:
             return 0
         self.step_count += 1
         slots = sorted(self.active)
         ready, deferred = self._ready_slots(slots)
-        if self.defaults.packed_decode:
+        ladder = self._ladder()
+        use_packed = self.defaults.packed_decode and not (
+            ladder is not None and ladder.dense_step_forced)
+        if use_packed:
             return self._step_packed(slots, ready, deferred)
         return self._step_dense(slots, ready, deferred)
 
@@ -496,13 +544,15 @@ class ServingEngine:
                 # deferred slot-steps) without decoding StepTraces
                 self.gateway.charge_compute(
                     charge.seconds, op_class=oc.DECODE_MASKED,
-                    tags=(oc.MASKED,) + (oc.DEFERRED,) * len(deferred),
+                    tags=(oc.MASKED,) + (oc.DEFERRED,) * len(deferred)
+                    + self._degraded_tags(),
                     bound=charge.bound)
             else:
                 kv_len = float(np.mean([index[s] for s in ready]))
                 charge = self.compute.decode_charge(len(ready), kv_len=kv_len)
                 self.gateway.charge_compute(
                     charge.seconds, op_class=oc.DECODE_COMPUTE,
+                    tags=self._degraded_tags(),
                     bound=charge.bound)
         self.key, sk = jax.random.split(self.key)
         # batch sampling params come from the lowest *resident* slot — a
@@ -591,7 +641,8 @@ class ServingEngine:
             # (mirroring the MASKED/DEFERRED tag convention)
             self.gateway.charge_compute(
                 charge.seconds, op_class=oc.DECODE_PACKED,
-                tags=(oc.PACKED,) + (oc.DEFERRED,) * len(deferred),
+                tags=(oc.PACKED,) + (oc.DEFERRED,) * len(deferred)
+                + self._degraded_tags(),
                 bound=charge.bound)
         self.key, sk = jax.random.split(self.key)
         # sampling params come from the lowest *resident* slot — the dense
@@ -713,4 +764,5 @@ class ServingEngine:
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "steps": self.step_count,
             "overlap": self.overlap.stats_dict(),
+            "closed_dirty": self.closed_dirty,
         }

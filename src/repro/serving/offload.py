@@ -15,6 +15,7 @@ TransferGateway so policies are comparable on the virtual clock.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -25,6 +26,8 @@ from repro.core.bridge import Direction
 from repro.core.gateway import TransferGateway
 from repro.core.policy import OffloadPolicy
 from repro.trace import opclasses as oc
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -42,6 +45,14 @@ class OffloadStats:
     restore_fill_s: float = 0.0
     #: restore seconds moved off the critical path (vs a blocking drain)
     restore_overlap_s: float = 0.0
+    # ---- resilience (DESIGN.md §11) --------------------------------------
+    #: integrity-reject redos: pipelined restores re-send the whole prefix
+    #: (one MAC stream), sync restores re-send one block
+    restore_retries: int = 0
+    #: restores the degradation ladder forced down the sync (bulk) path
+    sync_restores_forced: int = 0
+    #: on_restore_done subscribers that raised (isolated, logged, counted)
+    callback_errors: int = 0
 
 
 @dataclass
@@ -172,10 +183,16 @@ class OffloadManager:
         self.stats.restore_misses += misses
         total = sum(b.payload_bytes for b in hits)
         done_t = self.gateway.clock.now
+        faults = getattr(self.gateway, "faults", None)
+        ladder = faults.ladder if faults is not None else None
         if hits:
             payloads = [b.payload if b.payload is not None
                         else np.zeros(b.payload_bytes, np.uint8) for b in hits]
-            if self.pipelined_restore and self.gateway.pool.n_workers >= 2:
+            sync_forced = ladder is not None and ladder.sync_restore_forced
+            use_pipelined = (self.pipelined_restore
+                             and self.gateway.pool.n_workers >= 2
+                             and not sync_forced)
+            if use_pipelined:
                 _, result = pipelined_h2d(
                     self.gateway, payloads,
                     chunk_bytes=max(1, self.restore_chunk_bytes))
@@ -184,9 +201,32 @@ class OffloadManager:
                 self.stats.restore_overlap_s += result.overlap_s
                 done_t = result.done_t
             else:
+                if self.pipelined_restore and sync_forced:
+                    self.stats.sync_restores_forced += 1
                 self.gateway.bulk_h2d_pooled(payloads,
                                              op_class=oc.KV_RESTORE_H2D)
                 done_t = self.gateway.clock.now
+            if faults is not None:
+                # integrity verify after the transfer lands.  The pipelined
+                # path MACs the whole prefix as one stream, so a reject
+                # re-sends *everything* (drained — the conservative redo
+                # pattern); the sync path verifies per block and re-sends
+                # exactly one.  This asymmetry is what the degradation
+                # ladder's sync-restore rung trades for under sustained
+                # corruption.  Redos are bounded by the restore RetryPolicy
+                # and the final verify is forced clean — transient faults
+                # never strand a restore.
+                attempt = 0
+                while faults.restore_corrupted(attempt, key=key or ""):
+                    redo_bytes = (total if use_pipelined
+                                  else hits[attempt % len(hits)].payload_bytes)
+                    redo = self.gateway.charge_crossing(
+                        redo_bytes, Direction.H2D,
+                        op_class=oc.KV_RESTORE_H2D, tags=(oc.RETRY,))
+                    faults.note_restore_redo(redo)
+                    self.stats.restore_retries += 1
+                    done_t = max(done_t, self.gateway.clock.now)
+                    attempt += 1
             self.stats.restored_blocks += len(hits)
             self.stats.restored_bytes += total
             if key is not None:
@@ -196,8 +236,17 @@ class OffloadManager:
                 # an earlier one)
                 self.restore_done_t[key] = max(
                     done_t, self.restore_done_t.get(key, 0.0))
-                for cb in self.on_restore_done:
-                    cb(key, done_t)
+                for cb in list(self.on_restore_done):
+                    # a raising subscriber must not poison the completion
+                    # path for its peers (a stranded engine slot waits on a
+                    # notification that never comes); isolate, log, count
+                    try:
+                        cb(key, done_t)
+                    except Exception:
+                        self.stats.callback_errors += 1
+                        logger.exception(
+                            "on_restore_done subscriber %r failed for "
+                            "key=%r", cb, key)
             if self.obs is not None:
                 self.obs.registry.counter("offload/restores").inc()
                 self.obs.registry.histogram(

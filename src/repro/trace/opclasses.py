@@ -32,6 +32,14 @@ KV_RESTORE_H2D = "kv_restore_h2d"
 # -- loader (§6.1) --------------------------------------------------------------------
 LOADER_SHARD_H2D = "loader_shard_h2d"
 
+# -- resilience (fault injection + recovery; DESIGN.md §11) ---------------------------
+#: secure-session teardown recovery: one context re-established, charged the
+#: fixed setup toll (context create + pinned slot registration)
+CHAN_REESTABLISH = "chan_reestablish"
+#: attestation-expiry recovery: re-attestation round trip for a quarantined
+#: tenant/replica (SPDM GET_MEASUREMENTS + verifier)
+REATTEST = "reattest"
+
 # -- bridge_opt (arena + coalescer + pipelined restore; DESIGN.md §6) -----------------
 #: fused flush of queued sub-threshold H2D crossings (one toll for many)
 COALESCED_H2D = "coalesced_h2d"
@@ -79,6 +87,16 @@ DEFERRED = "deferred"
 #: tag counts read as (packed steps, deferred slot-steps), mirroring the
 #: MASKED/DEFERRED convention.
 PACKED = "packed"
+#: resilience tags (DESIGN.md §11): RETRY marks a fault-recovery re-charge —
+#: a failed crossing attempt re-recorded with backoff, or a restore-redo
+#: transfer after an integrity reject.  DEGRADED marks compute records
+#: emitted while the degradation ladder sits above level 0, so a tape shows
+#: exactly which step intervals ran in a degraded mode.
+RETRY = "retry"
+DEGRADED = "degraded"
+#: recovery op classes (charged on the engine-serial path with zero-byte
+#: registered-h2d crossings so replay repricing stays total)
+RECOVERY_CLASSES = frozenset({CHAN_REESTABLISH, REATTEST})
 #: compute op classes (kind == "compute" records) — the canonical set for
 #: attribution and replay summaries that enumerate compute classes
 COMPUTE_CLASSES = frozenset({DECODE_COMPUTE, DECODE_MASKED, DECODE_PACKED,

@@ -1,0 +1,338 @@
+"""Resilience subsystem (DESIGN.md §11): deterministic fault draws, retry
+policies, the degradation ladder, the injector's recovery accounting — and
+the chaos invariant the CI suite gates: under any seeded schedule of
+transient bridge faults, token streams are byte-identical to the fault-free
+run and no request is lost or hung.  Faults only move the clock, never the
+data."""
+
+import pytest
+
+from repro.cluster import ReplicaConfig, build_cluster
+from repro.core.bridge import (TPU_V5E, BridgeModel, Crossing, Direction,
+                               StagingKind)
+from repro.core.gateway import TransferGateway
+from repro.core.policy import cc_aware_defaults
+from repro.obs.stalls import attribute_stalls
+from repro.resilience import (DEFAULT_POLICIES, RUNG_DENSE_STEP, RUNG_NONE,
+                              RUNG_SYNC_RESTORE, DegradationLadder,
+                              FaultInjector, FaultPlan, RetryBudget,
+                              RetryPolicy, unit_draw)
+from repro.serving.engine import Request
+from repro.serving.sampler import SamplingParams
+from repro.trace import check_tape
+from repro.trace import opclasses as oc
+
+
+class TestUnitDraw:
+    def test_pure_and_deterministic(self):
+        assert unit_draw(7, "fail:x", 3) == unit_draw(7, "fail:x", 3)
+
+    def test_streams_and_counters_are_independent(self):
+        draws = {unit_draw(7, s, n) for s in ("a", "b") for n in range(8)}
+        assert len(draws) == 16          # no collisions across (stream, n)
+        assert unit_draw(7, "a", 0) != unit_draw(8, "a", 0)
+
+    def test_range(self):
+        for n in range(64):
+            assert 0.0 <= unit_draw(3, "s", n) < 1.0
+
+
+class TestRetryPolicy:
+    def test_backoff_grows_exponentially_without_jitter(self):
+        pol = RetryPolicy(backoff_base_s=1e-3, backoff_multiplier=2.0,
+                          jitter_frac=0.0)
+        assert pol.backoff_s(0, 0.9) == pytest.approx(1e-3)
+        assert pol.backoff_s(2, 0.1) == pytest.approx(4e-3)
+
+    def test_jitter_is_bounded_and_seed_determined(self):
+        pol = RetryPolicy(backoff_base_s=1e-3, jitter_frac=0.25)
+        lo, hi = pol.backoff_s(0, 0.0), pol.backoff_s(0, 1.0)
+        assert lo == pytest.approx(0.75e-3)
+        assert hi == pytest.approx(1.25e-3)
+        assert pol.backoff_s(0, 0.5) == pytest.approx(1e-3)
+
+    def test_never_negative(self):
+        pol = RetryPolicy(backoff_base_s=1e-3, jitter_frac=5.0)
+        assert pol.backoff_s(0, 0.0) == 0.0
+
+    def test_bulk_restore_policies_have_longer_fuse(self):
+        assert DEFAULT_POLICIES[oc.KV_RESTORE_H2D].timeout_s is not None
+        assert DEFAULT_POLICIES[oc.KV_RESTORE_H2D].max_attempts == 3
+
+
+class TestRetryBudget:
+    def test_escalates_every_window(self):
+        b = RetryBudget(events_per_escalation=3)
+        assert [b.consume() for _ in range(7)] == [
+            False, False, True, False, False, True, False]
+        assert b.consumed_total == 7
+        assert b.escalations == 2
+
+    def test_validates_window(self):
+        with pytest.raises(ValueError):
+            RetryBudget(events_per_escalation=0)
+
+
+class TestDegradationLadder:
+    def test_escalates_to_max_and_clamps(self):
+        lad = DegradationLadder()
+        for _ in range(5):
+            lad.escalate(1.0)
+        assert lad.level == RUNG_DENSE_STEP
+        assert lad.escalations_requested == 5
+        assert lad.sync_restore_forced
+        assert lad.coalescer_bypassed
+        assert lad.dense_step_forced
+
+    def test_disabled_records_but_pins_level_zero(self):
+        lad = DegradationLadder(enabled=False)
+        lad.escalate(1.0)
+        lad.escalate(2.0)
+        assert lad.level == RUNG_NONE
+        assert lad.escalations_requested == 2
+        assert not lad.transitions
+
+    def test_recovery_hysteresis_one_rung_per_quiet_window(self):
+        lad = DegradationLadder(recovery_quiet_s=0.1)
+        lad.escalate(0.0)
+        lad.escalate(0.0)
+        lad.observe_fault(0.0)
+        assert not lad.maybe_recover(0.05)      # still inside the window
+        assert lad.maybe_recover(0.15)          # one quiet window: one rung
+        assert lad.level == RUNG_SYNC_RESTORE
+        assert not lad.maybe_recover(0.16)      # needs a FRESH quiet window
+        assert lad.maybe_recover(0.30)
+        assert lad.level == RUNG_NONE
+        assert not lad.maybe_recover(1.0)       # already at the floor
+
+    def test_degraded_time_accounting(self):
+        lad = DegradationLadder(recovery_quiet_s=0.1)
+        lad.escalate(1.0)
+        lad.observe_fault(1.0)
+        assert lad.degraded_s(1.5) == pytest.approx(0.5)
+        assert lad.maybe_recover(2.0)
+        assert lad.degraded_s(5.0) == pytest.approx(1.0)  # closed interval
+
+
+def _gateway() -> TransferGateway:
+    return TransferGateway(BridgeModel(TPU_V5E, cc_on=True),
+                           cc_aware_defaults(True), pool_workers=2)
+
+
+def _crossing(nbytes: int = 4096) -> Crossing:
+    return Crossing(nbytes, Direction.H2D, StagingKind.REGISTERED)
+
+
+class TestFaultInjector:
+    def test_transient_plan_shape(self):
+        plan = FaultPlan.transient(seed=5, rate=0.16)
+        assert plan.crossing_failure_p == pytest.approx(0.16)
+        assert plan.teardown_p == pytest.approx(0.01)
+        assert plan.restore_corruption_p == pytest.approx(0.16)
+        assert plan.any_faults()
+        assert not FaultPlan(seed=5).any_faults()
+
+    def test_retries_are_policy_capped_and_tape_tagged(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=1, crossing_failure_p=1.0)
+                            ).attach(gw)
+        gw.charge_crossing(4096, Direction.H2D, op_class=oc.PROMPT_H2D)
+        pol = inj.policy_for(oc.PROMPT_H2D)
+        # certain failure still terminates: max_attempts - 1 re-charges,
+        # then the forced clean verify (transient by contract — no hang)
+        assert inj.stats.crossing_failures == pol.max_attempts - 1
+        retries = [r for r in gw.records if oc.RETRY in r.tags]
+        assert len(retries) == pol.max_attempts - 1
+        assert all(r.op_class == oc.PROMPT_H2D for r in retries)
+        assert inj.stats.retry_s > 0
+
+    def test_deterministic_across_instances(self):
+        def stats():
+            gw = _gateway()
+            inj = FaultInjector(FaultPlan.transient(seed=9, rate=0.4)
+                                ).attach(gw)
+            for i in range(32):
+                gw.charge_crossing(1024 + i, Direction.H2D,
+                                   op_class=oc.PROMPT_H2D)
+            return inj.stats.snapshot(), gw.clock.now
+
+        assert stats() == stats()
+
+    def test_fused_crossing_decomposes_when_retries_drain(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=2, crossing_failure_p=1.0)
+                            ).attach(gw)
+        cost = gw.bridge.crossing_time(_crossing(8192), n_contexts=1)
+        inj.on_crossing(oc.COALESCED_H2D, _crossing(8192), cost, n_units=4)
+        assert inj.stats.decompositions == 1
+        assert inj.stats.decompose_s > 0
+        # the decomposition is one more RETRY-tagged record after the
+        # whole-flush retries
+        retries = [r for r in gw.records if oc.RETRY in r.tags]
+        assert len(retries) == inj.stats.crossing_failures + 1
+
+    def test_single_unit_crossing_never_decomposes(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=2, crossing_failure_p=1.0)
+                            ).attach(gw)
+        cost = gw.bridge.crossing_time(_crossing(), n_contexts=1)
+        inj.on_crossing(oc.PROMPT_H2D, _crossing(), cost, n_units=1)
+        assert inj.stats.decompositions == 0
+
+    def test_teardown_reestablishes_with_setup_toll(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=3, teardown_p=1.0)).attach(gw)
+        gw.charge_crossing(4096, Direction.H2D, op_class=oc.PROMPT_H2D)
+        assert inj.stats.reestablishments == 1
+        p = gw.bridge.profile
+        assert inj.stats.reestablish_s == pytest.approx(
+            p.context_create + p.pinned_slot_alloc)
+        assert any(r.op_class == oc.CHAN_REESTABLISH for r in gw.records)
+
+    def test_restore_corruption_is_forced_clean_at_the_cap(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=4, restore_corruption_p=1.0)
+                            ).attach(gw)
+        pol = inj.policy_for(oc.KV_RESTORE_H2D)
+        verdicts = [inj.restore_corrupted(a) for a in range(pol.max_attempts)]
+        assert verdicts == [True] * (pol.max_attempts - 1) + [False]
+        assert inj.stats.restore_corruptions == pol.max_attempts - 1
+
+    def test_brownout_scales_cost_inside_the_window(self):
+        from repro.resilience import BrownoutWindow
+        gw = _gateway()
+        plan = FaultPlan(seed=5, brownouts=(
+            BrownoutWindow(t_start=0.0, t_end=1e9, factor=3.0),))
+        inj = FaultInjector(plan).attach(gw)
+        base = gw.bridge.crossing_time(_crossing(), n_contexts=1)
+        assert inj.on_crossing(oc.PROMPT_H2D, _crossing(), base) \
+            == pytest.approx(3.0 * base)
+
+    def test_reattest_is_charged_and_tape_visible(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=6, attestation_ttl_s=1.0)
+                            ).attach(gw)
+        assert not inj.reattest_due(0.5, attested_at=0.0)
+        assert inj.reattest_due(1.5, attested_at=0.0)
+        inj.charge_reattest()
+        assert inj.stats.reattests == 1
+        assert any(r.op_class == oc.REATTEST for r in gw.records)
+
+    def test_fault_events_drive_ladder_escalation(self):
+        gw = _gateway()
+        inj = FaultInjector(FaultPlan(seed=7, crossing_failure_p=1.0),
+                            budget=RetryBudget(events_per_escalation=2)
+                            ).attach(gw)
+        gw.charge_crossing(4096, Direction.H2D, op_class=oc.PROMPT_H2D)
+        assert inj.stats.escalations >= 1
+        assert inj.ladder.level >= 1
+
+
+# ---------------------------------------------------------------------------------
+# The chaos invariant (CI gate): seeded transient faults only move the clock
+# ---------------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs.base import all_configs, smoke_config
+    from repro.models.model import Model
+    return Model(smoke_config(all_configs()["olmo-1b"]))
+
+
+#: shared prefix (2 full blocks at block_tokens=8) — the warm-restore unit
+PREFIX = list(range(1, 17))
+
+
+def _serve(model, plan):
+    """One deterministic 2-replica cluster run in two warm-up waves.
+
+    Returns (tokens by request id, cluster stats, per-replica tapes,
+    per-replica fault snapshots)."""
+    cluster = build_cluster(
+        model, n_replicas=2, fault_plan=plan,
+        replica_cfg=ReplicaConfig(max_batch=2, max_len=64), seed=0)
+    submitted = 0
+    for wave in range(2):
+        for i in range(4):
+            ok = cluster.submit(Request(
+                f"w{wave}r{i}", prompt=PREFIX + [40 + 4 * wave + i] * 8,
+                sampling=SamplingParams(max_new_tokens=3)))
+            assert ok is not None
+            submitted += 1
+        cluster.run()      # drain: evictions seed the next wave's restores
+    stats = cluster.stats()
+    tokens = {e["request"].request_id: tuple(e["request"].output_tokens)
+              for e in cluster.request_log}
+    tapes = [r.tape() for r in cluster.replicas]
+    faults = [r.faults.stats.snapshot() for r in cluster.replicas
+              if r.faults is not None]
+    cluster.close()
+    assert stats["finished"] == submitted, "request lost or hung"
+    return tokens, stats, tapes, faults
+
+
+class TestChaosInvariant:
+    def test_tokens_byte_identical_across_seeded_schedules(self, tiny_model):
+        """The core invariant, gated for >= 3 seeded transient schedules."""
+        baseline, _, _, _ = _serve(tiny_model, None)
+        for seed in (3, 5, 9):
+            plan = FaultPlan.transient(seed=seed, rate=0.15)
+            tokens, _, _, faults = _serve(tiny_model, plan)
+            assert sum(f["injected_events"] for f in faults) > 0, \
+                f"seed {seed}: schedule injected nothing — test is vacuous"
+            assert tokens == baseline, \
+                f"seed {seed}: faults moved data, not just the clock"
+
+    def test_faulted_tapes_conserve_and_attribute_exactly(self, tiny_model):
+        """Recovery is tape-visible: faulted tapes still satisfy the bridge
+        laws, stall attribution closes over the recovery causes, and the
+        tagged recovery records are present."""
+        plan = FaultPlan(seed=5, crossing_failure_p=0.4, teardown_p=0.3,
+                         restore_corruption_p=0.4)
+        _, _, tapes, faults = _serve(tiny_model, plan)
+        assert sum(f["reestablishments"] for f in faults) > 0
+        all_records = [r for t in tapes for r in t.records]
+        assert any(oc.RETRY in r.tags for r in all_records)
+        assert any(r.op_class == oc.CHAN_REESTABLISH for r in all_records)
+        for tape in tapes:
+            assert check_tape(tape).ok, "faulted tape violates bridge laws"
+            report = attribute_stalls(tape)
+            assert report.closure >= 0.99, report.format()
+
+    def test_attestation_expiry_quarantines_then_reattests(self, tiny_model):
+        """TTL expiry quarantines, re-attestation heals, the round trip is
+        tape-visible — and the clock is still the only thing that moved."""
+        baseline, _, _, _ = _serve(tiny_model, None)
+        plan = FaultPlan(seed=1, attestation_ttl_s=0.05)
+        tokens, stats, tapes, _ = _serve(tiny_model, plan)
+        reattests = sum(s["reattests"] for s in stats["replicas"])
+        assert reattests > 0
+        assert any(r.op_class == oc.REATTEST
+                   for t in tapes for r in t.records)
+        # healed: the fleet ends the run routable again
+        assert all(h == "healthy" for h in stats["health"].values())
+        assert tokens == baseline
+
+    def test_ladder_never_changes_tokens(self, tiny_model):
+        """Ablation arms agree byte-for-byte: the ladder may change
+        execution shape (rungs, makespan), never data."""
+        plan = FaultPlan.transient(seed=7, rate=0.3)
+        on, _, _, _ = _serve(tiny_model, plan)
+        model = tiny_model
+        cluster = build_cluster(
+            model, n_replicas=2, fault_plan=plan,
+            replica_cfg=ReplicaConfig(max_batch=2, max_len=64), seed=0)
+        for r in cluster.replicas:
+            if r.faults is not None:
+                r.faults.ladder = DegradationLadder(enabled=False)
+        for wave in range(2):
+            for i in range(4):
+                cluster.submit(Request(
+                    f"w{wave}r{i}", prompt=PREFIX + [40 + 4 * wave + i] * 8,
+                    sampling=SamplingParams(max_new_tokens=3)))
+            cluster.run()
+        off = {e["request"].request_id: tuple(e["request"].output_tokens)
+               for e in cluster.request_log}
+        cluster.close()
+        assert on == off
