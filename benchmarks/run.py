@@ -19,7 +19,8 @@ def main() -> None:
 
     from . import (bench_bridge, bench_serving, bench_loader, bench_offload,
                    bench_fabric, bench_roofline, bench_cluster, bench_replay,
-                   bench_bridge_opt, bench_obs, bench_packed, bench_chaos)
+                   bench_bridge_opt, bench_obs, bench_packed, bench_chaos,
+                   bench_tp)
     modules = [
         ("bridge (SS4.1-4.3)", bench_bridge),
         ("serving (SS5.1-5.5)", bench_serving),
@@ -35,6 +36,8 @@ def main() -> None:
         ("packed (SS10 ragged decode roofline + packed-vs-dense gate)",
          bench_packed),
         ("chaos (SS11 fault injection + recovery ladder)", bench_chaos),
+        ("tp (SS12 fabric-P2P tensor parallelism + fallback repricing)",
+         bench_tp),
     ]
     if args.only:
         modules = [(t, m) for t, m in modules if args.only in t]

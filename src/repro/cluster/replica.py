@@ -33,7 +33,8 @@ from repro.bridge_opt import StagingArena
 from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
 from repro.obs import Observatory
 from repro.core.channels import VirtualClock
-from repro.core.fabric import Tenant
+from repro.core.compute import ComputeModel
+from repro.core.fabric import FabricTransport, Tenant
 from repro.core.gateway import TransferGateway
 from repro.core.policy import cc_aware_defaults
 from repro.resilience import FaultInjector, FaultPlan
@@ -45,7 +46,7 @@ from repro.trace import opclasses as oc
 from repro.trace.recorder import TraceRecorder
 from repro.trace.tape import BridgeTape
 
-from .budget import ContextLease, PinnedLease
+from .budget import BudgetExhausted, ContextLease, PinnedLease
 
 MS = 1e-3
 
@@ -69,6 +70,12 @@ class ReplicaConfig:
     max_len: int = 96
     #: secure contexts the replica would like (the budget may grant fewer)
     contexts_requested: int = 8
+    #: tensor-parallel degree (DESIGN.md §12): the replica's model shards
+    #: across this many of its tenant's devices — must fit the partition
+    #: (tp_degree <= partition size).  Per-step allreduces and shard
+    #: exchanges ride the tenant fabric as kind="p2p" records; only CVM
+    #: ingress pays the bridge toll.  1 = the classic single-device replica.
+    tp_degree: int = 1
     #: reuse-evidence threshold for the offload policy (§6.2)
     store_threshold: int = 2
     #: tokens per prefix block (page size of the bookkeeping pool)
@@ -151,6 +158,19 @@ class Replica:
         self.pinned_lease = pinned_lease
         self.bridge = bridge
         self.cfg = cfg or ReplicaConfig()
+        if lease.n_contexts < 1:
+            # a 0-context lease means the L4 budget granted nothing: spawn
+            # must fail on the budget path, not silently run a one-worker
+            # pool the budget never paid for (the old max(1, ...) clamp)
+            raise BudgetExhausted(
+                f"replica {replica_id}: lease for {lease.holder!r} granted "
+                f"{lease.n_contexts} secure contexts; a replica needs at "
+                f"least one")
+        if self.cfg.tp_degree > tenant.partition.size:
+            raise ValueError(
+                f"replica {replica_id}: tp_degree={self.cfg.tp_degree} does "
+                f"not fit tenant {tenant.tenant_id!r}'s "
+                f"{tenant.partition.size}-device partition")
         if pinned_lease is not None \
                 and pinned_lease.nbytes < self.cfg.staging_arena_bytes:
             raise ValueError(
@@ -166,7 +186,13 @@ class Replica:
                       if self.cfg.staging_arena_bytes else None)
         self.gateway = TransferGateway(
             bridge, defaults, clock=self.clock,
-            pool_workers=max(1, lease.n_contexts), arena=self.arena)
+            pool_workers=lease.n_contexts, arena=self.arena)
+        # in-tenant fabric transport (DESIGN.md §12): p2p crossings consult
+        # the tenant's fabric-manager health and this replica's attestation
+        # standing per crossing — lapsed evidence reprices the same bytes at
+        # the TCP fallback rate, tape-visibly (the "fabric_fallback" tag)
+        self.gateway.fabric = FabricTransport(
+            bridge.profile, tenant, attested=lambda: self.attested)
         # §6.1 discipline: pay channel-pool creation at provisioning, next to
         # the tenant's 10-20 s fmpm activation, never on the serving path —
         # and pin the staging classes serving will touch (prompt/prep/KV)
@@ -188,10 +214,17 @@ class Replica:
         self.obs: Optional[Observatory] = (
             Observatory(replica=replica_id, tenant=tenant.tenant_id)
             if defaults.observability else None)
+        # TP-aware step pricing: per-device FLOPs/HBM divide by tp_degree
+        # and the engine charges the ring allreduce as p2p_allreduce records
+        # through this replica's fabric transport (TP=1 is the classic model)
+        compute_model = (ComputeModel(model.cfg, bridge,
+                                      tp_degree=self.cfg.tp_degree)
+                         if defaults.charge_compute else None)
         self.engine = ServingEngine(
             model, max_batch=self.cfg.max_batch, max_len=self.cfg.max_len,
             gateway=self.gateway, policy=defaults.scheduling, bridge=bridge,
-            defaults=defaults, seed=seed, obs=self.obs)
+            defaults=defaults, seed=seed, obs=self.obs,
+            compute_model=compute_model)
         self.scheduler = Scheduler(self.engine, SchedulerConfig())
         self.offload = OffloadManager(
             self.gateway, defaults.offload,
@@ -532,6 +565,9 @@ class Replica:
             tenant_id=self.tenant.tenant_id,
             devices=self.tenant.visible_devices(),
             leased_contexts=self.lease.n_contexts,
+            tp_degree=self.cfg.tp_degree,
+            p2p_bytes=self.gateway.stats.p2p_bytes,
+            p2p_fallback_crossings=self.gateway.stats.p2p_fallback_crossings,
             preemptions=self.scheduler.preemptions,
             warm_blocks_restored=self.warm_blocks_restored,
             untracked_requests=self.untracked_requests,

@@ -334,6 +334,15 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
     independent channels do.  None = fault-free (the default fast path).
     """
     cfg = replica_cfg or ReplicaConfig()
+    if cfg.tp_degree > partition_size:
+        # fail before any tenant is provisioned: a TP group must fit inside
+        # one tenant's partition (in-tenant P2P is the only cheap path —
+        # cross-tenant traffic would both break isolation and ride the
+        # bridge), so the operator must size partitions to the TP degree
+        raise ValueError(
+            f"tp_degree={cfg.tp_degree} does not fit partition_size="
+            f"{partition_size}: a tensor-parallel replica shards across its "
+            f"own tenant's devices only (DESIGN.md §12)")
     tm = TenantManager(profile, cc_on=cc_on)
     budget = SecureContextBudget(profile, cc_on=cc_on)
     pinned = PinnedBudget(host_pinned_bytes)

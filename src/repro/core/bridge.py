@@ -42,6 +42,10 @@ GIB = 1 << 30
 class Direction(enum.Enum):
     H2D = "h2d"
     D2H = "d2h"
+    #: in-tenant fabric P2P — never transits host memory, so it carries no
+    #: staging discipline and no bridge serialization (DESIGN.md §12).  Only
+    #: kind="p2p" tape records use it; bridge pricing paths never see it.
+    P2P = "p2p"
 
 
 class StagingKind(enum.Enum):

@@ -27,6 +27,14 @@ from typing import Callable, Optional
 
 from .bridge import BridgeModel, Crossing, Direction
 
+#: channel id stamped on ``kind="p2p"`` tape records (DESIGN.md §12).  Fabric
+#: P2P is the one movement class CC does not serialize: it rides NVLink
+#: inside the tenant's partition, never acquires a secure copy channel, and
+#: therefore never competes with bridge crossings for the L4 context budget.
+#: The sentinel keeps that structural fact machine-checkable — conformance
+#: rejects any p2p record claiming a real (>= 0) channel.
+P2P_CHANNEL = -1
+
 
 class VirtualClock:
     """Deterministic simulated-time source.
@@ -229,6 +237,13 @@ class SecureChannelPool:
         """`submit` plus placement: returns ``(ctx_id, start, done)`` so the
         caller (the gateway's tape recorder) can attribute the crossing to the
         secure channel it actually serialized on."""
+        if crossing.direction is Direction.P2P:
+            # structural invariant, not a pricing choice: fabric P2P never
+            # acquires a secure copy channel (it is the path CC does not
+            # serialize) — route it through TransferGateway.p2p() instead
+            raise ValueError(
+                "P2P crossings do not ride secure copy channels "
+                "(TransferGateway.p2p is the fabric path)")
         t = self.clock.now if when is None else when
         if not self.persistent:
             # naive variant: pay full lifecycle per crossing, serialized.

@@ -108,13 +108,22 @@ class ComputeModel:
     """
 
     def __init__(self, cfg: ModelConfig, bridge: BridgeModel, *,
-                 spec: Optional[ComputeSpec] = None):
+                 spec: Optional[ComputeSpec] = None, tp_degree: int = 1):
+        if tp_degree < 1:
+            raise ValueError(f"tp_degree must be >= 1, got {tp_degree}")
         self.cfg = cfg
         self.bridge = bridge
         self.spec = spec if spec is not None else spec_for_profile(
             bridge.profile.name)
         self.active_params = float(cfg.active_param_count())
         self.bytes_per_param = _dtype_bytes(cfg.dtype)
+        #: tensor-parallel degree (DESIGN.md §12): per-device FLOPs and HBM
+        #: traffic divide by it (weights, KV and activations are sharded
+        #: across the tenant's partition), and each decode/prefill step owes
+        #: a ring allreduce over the tenant fabric — priced separately by
+        #: ``allreduce_seconds`` and charged by the engine as a
+        #: ``p2p_allreduce`` record, never folded into the compute interval.
+        self.tp_degree = int(tp_degree)
 
     # -- per-token byte/flop terms ------------------------------------------------------
 
@@ -216,9 +225,40 @@ class ComputeModel:
     def prefill_s(self, tokens: int) -> float:
         return self.prefill_charge(tokens).seconds
 
+    # -- tensor-parallel allreduce (DESIGN.md §12) --------------------------------------
+
+    def allreduce_bytes(self, batch: int) -> int:
+        """Per-device wire bytes of one step's TP ring allreduces.
+
+        A TP transformer layer allreduces twice (attention output + MLP
+        output), each over the step's activations (batch x d_model).  A ring
+        over ``tp_degree`` devices moves ``2 (tp-1)/tp`` x payload per
+        device (reduce-scatter + all-gather).  Zero when tp == 1 (nothing to
+        reduce) or the batch is empty (no forward ran — the phantom-charge
+        rule applies to collectives too).
+        """
+        batch = max(0, int(batch))
+        if self.tp_degree == 1 or batch == 0:
+            return 0
+        payload = 2 * self.cfg.n_layers * batch * self.cfg.d_model * self.bytes_per_param
+        return int(2 * (self.tp_degree - 1) / self.tp_degree * payload)
+
+    def allreduce_seconds(self, batch: int, p2p_bw: float) -> float:
+        """One step's allreduce time over the tenant fabric at ``p2p_bw``."""
+        nbytes = self.allreduce_bytes(batch)
+        if nbytes == 0:
+            return 0.0
+        return nbytes / p2p_bw
+
     # -- the roofline -------------------------------------------------------------------
 
     def _charge(self, kind: str, flops: float, hbm_bytes: float) -> ComputeCharge:
+        """Per-device roofline: under TP the weights, KV and activations are
+        sharded, so one device sees 1/tp of the step's FLOPs and HBM bytes
+        (the allreduce that glues the shards back together is priced
+        separately — it is fabric traffic, not device compute)."""
+        flops /= self.tp_degree
+        hbm_bytes /= self.tp_degree
         ct = self.bridge.compute_time(flops, self.spec.peak_flops)
         mt = self.bridge.hbm_time(hbm_bytes, self.spec.hbm_bw)
         if ct >= mt:

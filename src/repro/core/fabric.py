@@ -131,14 +131,19 @@ class FabricManager:
 
     # -- scheduling API: allocate fabric-valid shapes, never arbitrary sets --------------
 
-    def find_partition(self, size: int) -> Optional[PartitionDef]:
+    def find_partition(self, size: int, *,
+                       require_healthy: bool = False) -> Optional[PartitionDef]:
         if size not in PARTITION_VOCABULARY:
             raise ValueError(
                 f"requested shape {size} not in partition vocabulary {PARTITION_VOCABULARY}")
         busy = {d for t in self.active.values() for d in t.partition.device_ids}
         for p in self.partitions:
-            if p.size == size and not (set(p.device_ids) & busy):
-                return p
+            if p.size != size or (set(p.device_ids) & busy):
+                continue
+            if require_healthy and \
+                    self._partition_state[p.partition_id] is not FabricState.HEALTHY:
+                continue
+            return p
         return None
 
     def activate(self, tenant_id: str, size: int, *,
@@ -148,14 +153,23 @@ class FabricManager:
         `require_healthy` is the scheduling precondition the paper argues
         for; with it off, a stale partition activates and the tenant hits
         guest-side remap validation errors (modeled as RuntimeError at use).
+        With it on, unhealthy partitions are skipped during the search — a
+        stale partition 0 must not shadow a healthy free partition 1.
         """
-        part = self.find_partition(size)
+        part = self.find_partition(size, require_healthy=require_healthy)
         if part is None:
+            if require_healthy:
+                # Distinguish "fabric full" from "free capacity exists but
+                # the health gate vetoed it" — the latter is the paper's
+                # stale-FM scheduling precondition firing.
+                unhealthy = self.find_partition(size)
+                if unhealthy is not None:
+                    state = self._partition_state[unhealthy.partition_id]
+                    raise RuntimeError(
+                        f"fabric-state health gate: partition "
+                        f"{unhealthy.partition_id} is {state.value}")
             raise RuntimeError(f"no free {size}-device partition")
         state = self._partition_state[part.partition_id]
-        if require_healthy and state is not FabricState.HEALTHY:
-            raise RuntimeError(
-                f"fabric-state health gate: partition {part.partition_id} is {state.value}")
         tenant = Tenant(tenant_id, part, fabric_state=state,
                         activation_seconds=sum(ACTIVATE_SECONDS) / 2)
         self.active[tenant_id] = tenant
@@ -194,3 +208,43 @@ def p2p_bandwidth(profile: BridgeProfile, *, fabric_up: bool) -> float:
     Fabric down: CC-compatible TCP fallback (~10 MB/s measured).
     """
     return profile.fabric_p2p_bw if fabric_up else profile.fabric_fallback_bw
+
+
+class FabricTransport:
+    """The tenant-side view of its fabric: prices P2P crossings (DESIGN §12).
+
+    Attached to a `TransferGateway` as `gateway.fabric`, this is what decides
+    whether a P2P crossing rides the full in-tenant fabric rate or the
+    CC-compatible TCP fallback.  Fabric is *up* for a tenant only when all of
+    the following hold:
+
+      * its partition's fabric state is HEALTHY (a STALE/DEGRADED tenant hits
+        guest FLA remap validation errors and must fall back),
+      * its attestation evidence is current (`attested()` hook — wired to
+        `TenantManager` freshness in the cluster layer; evidence that lapses
+        mid-flight reprices subsequent P2P traffic, tape-visibly),
+      * the profile has a fabric at all (`fabric_p2p_bw > 0`; RTX Pro 6000 /
+        H200 single-device profiles never had one).
+
+    The decision is re-evaluated per crossing, so a `mark_stale` or a lapsed
+    TTL between two migrations is visible as a pricing step in the tape.
+    """
+
+    def __init__(self, profile: BridgeProfile, tenant: Optional[Tenant] = None,
+                 *, attested=None):
+        self.profile = profile
+        self.tenant = tenant
+        self._attested = attested
+
+    def fabric_up(self) -> bool:
+        if self.profile.fabric_p2p_bw <= 0:
+            return False
+        if self.tenant is not None and \
+                self.tenant.fabric_state is not FabricState.HEALTHY:
+            return False
+        if self._attested is not None and not self._attested():
+            return False
+        return True
+
+    def bandwidth(self) -> float:
+        return p2p_bandwidth(self.profile, fabric_up=self.fabric_up())

@@ -27,7 +27,7 @@ import numpy as np
 
 from .accounting import CopyRecord
 from .bridge import BridgeModel, Crossing, Direction, StagingKind
-from .channels import SecureChannelPool, VirtualClock
+from .channels import P2P_CHANNEL, SecureChannelPool, VirtualClock
 from .policy import RuntimeDefaults, SchedulingPolicy
 
 
@@ -48,6 +48,11 @@ class GatewayStats:
     # ---- device-local compute (core.compute.ComputeModel charges) -------------
     compute_charges: int = 0
     compute_time_s: float = 0.0
+    # ---- in-tenant fabric P2P (never the bridge; DESIGN.md §12) ---------------
+    p2p_crossings: int = 0
+    p2p_bytes: int = 0
+    p2p_time_s: float = 0.0
+    p2p_fallback_crossings: int = 0
 
 
 class TransferGateway:
@@ -83,6 +88,12 @@ class TransferGateway:
         #: None means the fault-free fast path: zero extra work, golden tapes
         #: unchanged.
         self.faults: Optional[Any] = None
+        #: optional fabric.FabricTransport — when attached, ``p2p`` prices
+        #: in-tenant device-to-device movement against the tenant's live
+        #: fabric state (full P2P rate when healthy+attested, TCP fallback
+        #: otherwise).  None means no fabric view: ``p2p`` assumes the
+        #: profile's fabric is up (single-tenant bench paths).
+        self.fabric: Optional[Any] = None
         self._staging_registered: set[tuple] = set()
 
     def _faulted_cost(self, op_class: str, crossing: Crossing, cost: float, *,
@@ -292,6 +303,49 @@ class TransferGateway:
         for hook in self.on_record:
             hook(rec)
         return seconds
+
+    # -- in-tenant fabric P2P (DESIGN.md §12) --------------------------------------------
+
+    def p2p(self, nbytes: int, *, op_class: str, tags: tuple = ()) -> float:
+        """Charge an in-tenant fabric-P2P transfer (never the bridge).
+
+        P2P is the one data path CC does not serialize: no host staging, no
+        per-channel queueing, no toll floors — just bytes over the tenant
+        fabric at ``fabric.p2p_bandwidth``.  The charge still advances the
+        engine's virtual clock (a TP allreduce is on the step critical path)
+        but lands on the tape as a ``kind="p2p"`` record on channel -1 with
+        empty staging, counted in ``stats.p2p_*`` — never in
+        ``bridge_time_s`` or the h2d/d2h crossing stats.
+
+        The fabric decision is re-evaluated per call: a tenant whose
+        partition went STALE or whose attestation evidence lapsed is priced
+        at the CC-compatible TCP fallback rate and tagged FABRIC_FALLBACK,
+        so degradation shows up in the tape as a pricing step, not a hidden
+        slowdown.
+        """
+        from .fabric import FabricTransport, p2p_bandwidth
+        if nbytes < 0:
+            raise ValueError(f"cannot move negative bytes {nbytes}")
+        transport = self.fabric or FabricTransport(self.bridge.profile)
+        up = transport.fabric_up()
+        bw = p2p_bandwidth(self.bridge.profile, fabric_up=up)
+        cost = nbytes / bw if nbytes else 0.0
+        if not up:
+            tags = tuple(tags) + ("fabric_fallback",)
+            self.stats.p2p_fallback_crossings += 1
+        end = self.clock.advance(cost)
+        self.stats.p2p_crossings += 1
+        self.stats.p2p_bytes += int(nbytes)
+        self.stats.p2p_time_s += cost
+        rec = CopyRecord(
+            op_class, int(nbytes), cost, self.bridge.cc_on,
+            direction=Direction.P2P.value, staging="", channel=P2P_CHANNEL,
+            t_start=end - cost, t_end=end, charged=True,
+            tags=tuple(tags), kind="p2p")
+        self.records.append(rec)
+        for hook in self.on_record:
+            hook(rec)
+        return cost
 
     # -- bookkeeping -------------------------------------------------------------------
 

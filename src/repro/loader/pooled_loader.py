@@ -169,11 +169,22 @@ class PooledLoader:
     # -- real load ---------------------------------------------------------------------------
 
     def load(self, ckpt: ShardedCheckpoint, variant: LoaderVariant,
-             *, device: Optional[jax.Device] = None) -> tuple[dict, dict]:
+             *, device: Optional[jax.Device] = None,
+             tp_degree: int = 1) -> tuple[dict, dict]:
         """Load all tensors (real device_put), charging modeled time.
+
+        ``tp_degree > 1`` adds tensor-parallel shard placement (DESIGN.md
+        §12): the checkpoint crosses the bridge exactly once — the CVM
+        ingress, the only toll-paying movement — and is then scattered to
+        the tenant's other ``tp-1`` devices over the fabric, recorded as a
+        ``p2p_shard_exchange`` crossing of ``(tp-1)/tp`` of the weight
+        bytes.  Bridge bytes are identical to a TP=1 load; only fabric
+        bytes grow with the degree.
 
         Returns (tensors, breakdown).
         """
+        if tp_degree < 1:
+            raise ValueError(f"tp_degree must be >= 1, got {tp_degree}")
         device = device or jax.devices()[0]
         total = ckpt.total_bytes()
         kinds = tags = None
@@ -229,4 +240,12 @@ class PooledLoader:
                     staging=staging_i, tags=tags_i)
         if pool is not None:
             pool.teardown(async_=(variant is LoaderVariant.PREWARMED))
+        if tp_degree > 1 and self.gateway is not None:
+            # scatter each device's 1/tp slice from the ingress device over
+            # the tenant fabric: (tp-1)/tp of the weights move as one
+            # kind="p2p" exchange — no staging, no toll, no bridge bytes
+            exchange = int(total * (tp_degree - 1) / tp_degree)
+            cost = self.gateway.p2p(exchange, op_class=oc.P2P_SHARD_EXCHANGE)
+            breakdown["shard_exchange"] = cost
+            breakdown["total"] += cost
         return tensors, breakdown

@@ -64,12 +64,17 @@ CAUSE_DEFERRED = "deferred_slot"
 CAUSE_RETRY = "fault_retry"
 CAUSE_REESTABLISH = "chan_reestablish"
 CAUSE_REATTEST = "reattest"
+#: fabric-P2P charge (DESIGN.md §12): a TP allreduce / KV migration / shard
+#: exchange on the step critical path — named gap, not serialization (the
+#: fabric is the one path CC does not serialize, so lumping it under
+#: channel_serialization would misread every TP tape)
+CAUSE_P2P = "fabric_p2p"
 CAUSE_UNATTRIBUTED = "unattributed_idle"
 
 #: every cause, in report order
 CAUSES = (CAUSE_FRESH, CAUSE_SERIAL, CAUSE_FLUSH, CAUSE_RESTORE,
           CAUSE_DEFERRED, CAUSE_RETRY, CAUSE_REESTABLISH, CAUSE_REATTEST,
-          CAUSE_UNATTRIBUTED)
+          CAUSE_P2P, CAUSE_UNATTRIBUTED)
 
 #: uncharged traffic that means "a restore was in flight"
 _RESTORE_CLASSES = frozenset({oc.KV_RESTORE_H2D, oc.KV_RESTORE_PIPELINED})
@@ -157,6 +162,8 @@ def _fresh_toll_delta(profile_name: str, cc_on: bool) -> float:
 
 def _charged_cause(record) -> str:
     """Cause of a charged crossing's non-fresh remainder."""
+    if record.is_p2p:
+        return CAUSE_P2P
     if record.op_class == oc.CHAN_REESTABLISH:
         return CAUSE_REESTABLISH
     if record.op_class == oc.REATTEST:

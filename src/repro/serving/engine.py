@@ -340,6 +340,9 @@ class ServingEngine:
                     bound=charge.bound)
                 if self.coalescer is not None:
                     self.coalescer.poll()   # prefill compute moved the clock
+                # TP prefill allreduces over the prompt's activations (the
+                # per-token payload is the same shape as a decode batch row)
+                self._charge_allreduce(cold)
         self._insert_slot_cache(pre_cache, slot)
         self.key, sk = jax.random.split(self.key)
         first = sample(logits, sk, req.sampling)
@@ -423,6 +426,28 @@ class ServingEngine:
         if (self.coalescer is not None
                 and self.coalescer.bypass != ladder.coalescer_bypassed):
             self.coalescer.set_bypass(ladder.coalescer_bypassed)
+
+    # -- tensor-parallel allreduce (DESIGN.md §12) --------------------------------------
+
+    def _charge_allreduce(self, batch: int) -> None:
+        """Charge one step's TP ring allreduce over the tenant fabric.
+
+        Only a TP>1 compute model owes one (a single-device replica has
+        nothing to reduce — the record never appears, so TP=1 tapes are
+        byte-identical to pre-TP tapes).  The bytes ride ``gateway.p2p``:
+        kind="p2p", priced at the fabric rate (or the TCP fallback for a
+        stale/unattested tenant), never the bridge.  Execution is untouched
+        — the smoke model still runs unsharded — which is exactly why TP
+        token streams are byte-identical to TP=1.
+        """
+        if self.compute is None or self.compute.tp_degree == 1:
+            return
+        nbytes = self.compute.allreduce_bytes(batch)
+        if nbytes == 0:
+            return
+        self.gateway.p2p(nbytes, op_class=oc.P2P_ALLREDUCE)
+        if self.coalescer is not None:
+            self.coalescer.poll()   # the allreduce moved the clock
 
     # -- the decode step under each policy ------------------------------------------------
 
@@ -554,6 +579,7 @@ class ServingEngine:
                     charge.seconds, op_class=oc.DECODE_COMPUTE,
                     tags=self._degraded_tags(),
                     bound=charge.bound)
+            self._charge_allreduce(len(ready))
         self.key, sk = jax.random.split(self.key)
         # batch sampling params come from the lowest *resident* slot — a
         # mask-independent choice, so masking cannot change which request's
@@ -644,6 +670,7 @@ class ServingEngine:
                 tags=(oc.PACKED,) + (oc.DEFERRED,) * len(deferred)
                 + self._degraded_tags(),
                 bound=charge.bound)
+            self._charge_allreduce(n)
         self.key, sk = jax.random.split(self.key)
         # sampling params come from the lowest *resident* slot — the dense
         # path's mask-independent convention, kept so packed vs dense can

@@ -53,6 +53,9 @@ class OffloadStats:
     sync_restores_forced: int = 0
     #: on_restore_done subscribers that raised (isolated, logged, counted)
     callback_errors: int = 0
+    # ---- intra-CVM fabric migration (DESIGN.md §12) -----------------------
+    migrated_blocks: int = 0
+    migrated_bytes: int = 0
 
 
 @dataclass
@@ -255,6 +258,34 @@ class OffloadManager:
                     "offload/restore_inflight_s").observe(
                         max(0.0, done_t - self.gateway.clock.now))
         self.last_restore_done_t = done_t
+        return len(hits), total
+
+    # -- intra-CVM migration (DESIGN.md §12) ---------------------------------------------
+
+    def migrate(self, token_hashes: list) -> tuple[int, int]:
+        """Move resident KV blocks between a TP tenant's devices over the
+        fabric — shard rebalancing after a partition grows, or packing a
+        migrating request's prefix onto its new shard owners.
+
+        This is the movement class the tentpole exists for: the payload
+        never leaves the CVM, so it rides ``gateway.p2p`` (kind="p2p",
+        fabric-priced, FABRIC_FALLBACK-tagged when the tenant is stale or
+        unattested) and contributes zero bridge bytes, zero h2d/d2h
+        crossings, and zero staging tolls.  Only blocks present in the
+        host-visible store are movable (the same restorable inventory the
+        router sees).  Returns ``(blocks_moved, bytes_moved)``.
+        """
+        hits = [self.host_store[h] for h in token_hashes
+                if h in self.host_store]
+        total = sum(b.payload_bytes for b in hits)
+        if hits:
+            self.gateway.p2p(total, op_class=oc.P2P_KV_MIGRATE)
+            self.stats.migrated_blocks += len(hits)
+            self.stats.migrated_bytes += total
+            if self.obs is not None:
+                self.obs.registry.counter("offload/migrated_blocks").inc(
+                    len(hits))
+                self.obs.registry.counter("offload/migrated_bytes").inc(total)
         return len(hits), total
 
 

@@ -24,6 +24,15 @@ law fails here before any throughput number moves.
       ``max_secure_contexts`` distinct channels, and re-pricing the same
       stream CC-off never costs more than the recorded CC-on stream
       (CC time >= native time; compute re-prices at parity).
+
+Fabric-P2P records (kind="p2p", DESIGN.md §12) are exempt from L3 — they
+never transit host staging, so no toll floor applies — but carry their own
+structural law ("P2P"): the op-class/kind bijection holds (P2P_CLASSES
+records are exactly the kind-"p2p" records), P2P bytes never appear on a
+bridge channel (channel is -1, direction "p2p", staging empty), and every
+P2P interval is floored by its bytes over the fabric rate (the fallback
+rate when tagged FABRIC_FALLBACK — a degraded tenant cannot record
+full-fabric timing).
 """
 
 from __future__ import annotations
@@ -156,14 +165,42 @@ def check_tape(tape: BridgeTape) -> ConformanceReport:
 
     # -- L3: staging tolls present ------------------------------------------------------
     for i, r in enumerate(records):
-        if r.is_compute:
-            continue  # no staging path, no toll floor
+        if not r.is_bridge:
+            continue  # compute and fabric P2P have no staging path / toll floor
         report.checks["L3"] = report.checks.get("L3", 0) + 1
         floor = _toll_floor(profile, r.staging, tape.meta.cc_on)
         if r.duration_s < floor - EPS:
             report.violations.append(Violation(
                 "L3", i, f"{r.staging} {r.op_class} took {r.duration_s:.3e}s "
                          f"< toll floor {floor:.3e}s"))
+
+    # -- P2P: fabric records are structural, never bridge-priced ------------------------
+    from .opclasses import FABRIC_FALLBACK, P2P_CLASSES
+    for i, r in enumerate(records):
+        classed = r.op_class in P2P_CLASSES
+        if not (classed or r.is_p2p):
+            continue
+        report.checks["P2P"] = report.checks.get("P2P", 0) + 1
+        if classed != r.is_p2p:
+            report.violations.append(Violation(
+                "P2P", i, f"op class {r.op_class!r} / kind {r.kind!r} break "
+                          f"the P2P bijection"))
+            continue
+        if r.channel >= 0 or r.direction != "p2p" or r.staging:
+            report.violations.append(Violation(
+                "P2P", i, f"fabric bytes on a bridge path: channel="
+                          f"{r.channel} direction={r.direction!r} "
+                          f"staging={r.staging!r} (P2P never transits the "
+                          f"bridge)"))
+            continue
+        bw = (profile.fabric_fallback_bw if FABRIC_FALLBACK in r.tags
+              else profile.fabric_p2p_bw)
+        if bw > 0 and r.duration_s < r.nbytes / bw - EPS:
+            report.violations.append(Violation(
+                "P2P", i, f"{r.op_class} moved {r.nbytes} bytes in "
+                          f"{r.duration_s:.3e}s — faster than the "
+                          f"{'fallback' if FABRIC_FALLBACK in r.tags else 'fabric'} "
+                          f"rate {bw:.3e} B/s allows"))
 
     # -- L4: bounded contexts + CC time >= native time ----------------------------------
     channels = {r.channel for r in records if r.channel >= 0}

@@ -40,6 +40,19 @@ CHAN_REESTABLISH = "chan_reestablish"
 #: tenant/replica (SPDM GET_MEASUREMENTS + verifier)
 REATTEST = "reattest"
 
+# -- fabric P2P (in-tenant device-to-device; DESIGN.md §12) ---------------------------
+# P2P semantics hang off the record's `kind` field (kind == "p2p"), like
+# compute: the bridge law L1-L4 does not apply — these crossings never
+# transit host memory, carry no staging discipline, and are priced at
+# `fabric.p2p_bandwidth` (or the TCP fallback when the tenant's fabric is
+# down / attestation lapsed — see the FABRIC_FALLBACK tag).
+#: intra-CVM KV migration between a tenant's devices (never the bridge)
+P2P_KV_MIGRATE = "p2p_kv_migrate"
+#: per-step TP ring allreduce over the tenant fabric (2(tp-1)/tp x activations)
+P2P_ALLREDUCE = "p2p_allreduce"
+#: intra-tenant weight-shard exchange at load (only CVM ingress pays the toll)
+P2P_SHARD_EXCHANGE = "p2p_shard_exchange"
+
 # -- bridge_opt (arena + coalescer + pipelined restore; DESIGN.md §6) -----------------
 #: fused flush of queued sub-threshold H2D crossings (one toll for many)
 COALESCED_H2D = "coalesced_h2d"
@@ -94,6 +107,11 @@ PACKED = "packed"
 #: exactly which step intervals ran in a degraded mode.
 RETRY = "retry"
 DEGRADED = "degraded"
+#: fabric-P2P tag (DESIGN.md §12): the tenant's fabric was down (STALE /
+#: DEGRADED partition state, lapsed attestation evidence, or a fabric-less
+#: profile) when this kind="p2p" record was charged, so it was priced at the
+#: CC-compatible TCP fallback rate instead of `fabric_p2p_bw`.
+FABRIC_FALLBACK = "fabric_fallback"
 #: recovery op classes (charged on the engine-serial path with zero-byte
 #: registered-h2d crossings so replay repricing stays total)
 RECOVERY_CLASSES = frozenset({CHAN_REESTABLISH, REATTEST})
@@ -101,6 +119,10 @@ RECOVERY_CLASSES = frozenset({CHAN_REESTABLISH, REATTEST})
 #: attribution and replay summaries that enumerate compute classes
 COMPUTE_CLASSES = frozenset({DECODE_COMPUTE, DECODE_MASKED, DECODE_PACKED,
                              PREFILL_COMPUTE})
+#: fabric-P2P op classes (kind == "p2p" records) — conformance enforces the
+#: bijection: every record with one of these classes has kind "p2p", and
+#: every kind-"p2p" record carries one of these classes on channel -1.
+P2P_CLASSES = frozenset({P2P_KV_MIGRATE, P2P_ALLREDUCE, P2P_SHARD_EXCHANGE})
 
 #: classes whose crossings are per-step input preparation (candidates for
 #: batching into one registered crossing in a counterfactual replay).  The

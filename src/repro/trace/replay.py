@@ -24,6 +24,7 @@ from typing import Optional, Sequence, Union
 from repro.core.accounting import Attribution, OpClassRow
 from repro.core.bridge import (PROFILES, BridgeModel, Crossing, Direction,
                                StagingKind)
+from repro.core.fabric import p2p_bandwidth
 from repro.core.policy import SchedulingPolicy
 
 from . import opclasses as oc
@@ -47,6 +48,12 @@ class ReplaySpec:
     #: rewrite the stream to another scheduling discipline before pricing
     policy: Optional[Union[str, SchedulingPolicy]] = None
     aesni: bool = True                     # §4.3 cipher ablation lever
+    #: fabric-P2P lever (DESIGN.md §12): None re-prices each kind="p2p"
+    #: record as recorded (FABRIC_FALLBACK-tagged ones at the TCP fallback
+    #: rate, the rest at full fabric rate); True/False forces every P2P
+    #: record up or down — "what would this TP run cost if the tenant's
+    #: fabric had been healthy / had lapsed the whole time"
+    fabric_up: Optional[bool] = None
     label: str = ""
 
     def policy_value(self) -> str:
@@ -74,6 +81,10 @@ class RewrittenCrossing:
     #: roofline boundness of a compute record ("compute"/"memory"/"" for
     #: pre-boundness tapes) — selects which parity factor reprices it
     bound: str = ""
+    #: kind="p2p" only: the record was charged at the TCP fallback rate
+    #: (FABRIC_FALLBACK tag) — RewrittenCrossing drops tags, so the pricing
+    #: decision is carried explicitly for the as-recorded replay
+    fallback: bool = False
 
 
 def rewrite_for_policy(records: Sequence[TapeRecord],
@@ -105,14 +116,15 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
         batch.clear()
 
     for r in records:
-        if r.is_compute:
-            # compute is not bridge traffic: no policy moves it, but it does
-            # break a run of prep uploads (the engine charged the forward
-            # between one step's preps and the next's)
+        if r.is_compute or r.is_p2p:
+            # compute and fabric P2P are not bridge traffic: no policy moves
+            # them, but they do break a run of prep uploads (the engine
+            # charged the interval between one step's preps and the next's)
             flush()
             out.append(RewrittenCrossing(r.op_class, r.direction, r.nbytes,
                                          r.staging, r.duration_s,
-                                         kind=r.kind, bound=r.bound))
+                                         kind=r.kind, bound=r.bound,
+                                         fallback=oc.FABRIC_FALLBACK in r.tags))
             continue
         if policy in (SchedulingPolicy.SYNC_DRAIN.value,
                       SchedulingPolicy.WORKER_DRAIN.value):
@@ -241,7 +253,8 @@ class TraceReplayer:
             policy = policy or self.tape.meta.policy
             stream = [RewrittenCrossing(r.op_class, r.direction, r.nbytes,
                                         r.staging, r.duration_s, kind=r.kind,
-                                        bound=r.bound)
+                                        bound=r.bound,
+                                        fallback=oc.FABRIC_FALLBACK in r.tags)
                       for r in self.tape.records]
 
         # compute re-prices at parity (L5: device-local work is ~unaffected
@@ -273,6 +286,17 @@ class TraceReplayer:
         for rc in stream:
             if rc.kind == "compute":
                 cost = rc.recorded_s * compute_scale(rc.bound)
+            elif rc.kind == "p2p":
+                # fabric P2P re-prices against the counterfactual profile's
+                # fabric, never the bridge; CC on/off is irrelevant (the one
+                # path CC does not serialize).  A profile without a fabric
+                # (fabric_p2p_bw == 0) prices at its TCP fallback.
+                up = (not rc.fallback if spec.fabric_up is None
+                      else spec.fabric_up)
+                bw = p2p_bandwidth(model.profile, fabric_up=up)
+                if bw <= 0:
+                    bw = model.profile.fabric_fallback_bw
+                cost = rc.nbytes / bw if rc.nbytes else 0.0
             else:
                 crossing = Crossing(rc.nbytes, Direction(rc.direction),
                                     StagingKind(rc.staging))

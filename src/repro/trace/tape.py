@@ -32,6 +32,14 @@ unchanged, so this reader accepts v1-v3.  The writer stamps v3 because a
 stream whose byte totals double-count fused constituents (record.nbytes is
 the fused total; sources re-lists the parts) must not be summed by a
 reader unaware of the distinction.
+
+v4 (DESIGN.md §12): records may carry ``kind == "p2p"`` — in-tenant fabric
+P2P movement (KV migration, TP allreduce, weight-shard exchange) that never
+transits the serialized bridge.  Direction is "p2p", staging is empty,
+channel is -1, and the record is priced at `fabric.p2p_bandwidth` (or the
+TCP fallback, tagged FABRIC_FALLBACK).  v1-v3 tapes parse unchanged; the
+writer stamps v4 because a stream whose byte totals include fabric traffic
+must not be summed as bridge bytes by a reader unaware of the kind.
 """
 
 from __future__ import annotations
@@ -42,14 +50,15 @@ from typing import Iterable, Optional
 
 from repro.core.accounting import CopyRecord
 
-TAPE_FORMAT = "bridge-tape/v3"
+TAPE_FORMAT = "bridge-tape/v4"
 #: major versions this reader speaks (v1 = crossings only; v2 adds compute
-#: records; v3 adds coalesced-record sources)
-READABLE_VERSIONS = (1, 2, 3)
+#: records; v3 adds coalesced-record sources; v4 adds fabric-P2P records)
+READABLE_VERSIONS = (1, 2, 3, 4)
 
 #: record kinds
 KIND_CROSSING = "crossing"
 KIND_COMPUTE = "compute"
+KIND_P2P = "p2p"
 
 
 class TapeFormatError(ValueError):
@@ -92,6 +101,15 @@ class TapeRecord:
     @property
     def is_compute(self) -> bool:
         return self.kind == KIND_COMPUTE
+
+    @property
+    def is_p2p(self) -> bool:
+        return self.kind == KIND_P2P
+
+    @property
+    def is_bridge(self) -> bool:
+        """A serialized-bridge crossing: not compute, not fabric P2P."""
+        return self.kind == KIND_CROSSING
 
     @classmethod
     def from_copy_record(cls, rec: CopyRecord) -> "TapeRecord":
@@ -151,8 +169,9 @@ class BridgeTape:
         return len(self.records)
 
     def n_crossings(self) -> int:
-        """Crossing records only — compute intervals are not crossings."""
-        return sum(1 for r in self.records if not r.is_compute)
+        """Bridge-crossing records only — compute intervals and fabric-P2P
+        movement are not serialized-bridge crossings."""
+        return sum(1 for r in self.records if r.is_bridge)
 
     def total_bytes(self) -> int:
         return sum(r.nbytes for r in self.records)
@@ -166,8 +185,23 @@ class BridgeTape:
         return sum(r.duration_s for r in self.records if r.is_compute)
 
     def crossing_seconds(self) -> float:
-        """Recorded serialized-bridge time (crossing records only)."""
-        return sum(r.duration_s for r in self.records if not r.is_compute)
+        """Recorded serialized-bridge time (bridge-crossing records only —
+        fabric-P2P time is deliberately excluded: it is the path the bridge
+        law does not serialize, and folding it in would dilute fresh_share
+        and every bridge-time recovery ratio)."""
+        return sum(r.duration_s for r in self.records if r.is_bridge)
+
+    def p2p_seconds(self) -> float:
+        """Recorded in-tenant fabric-P2P time (kind="p2p" records)."""
+        return sum(r.duration_s for r in self.records if r.is_p2p)
+
+    def p2p_bytes(self) -> int:
+        """Bytes moved over the tenant fabric (never the bridge)."""
+        return sum(r.nbytes for r in self.records if r.is_p2p)
+
+    def bridge_bytes(self) -> int:
+        """Bytes that actually crossed the serialized bridge."""
+        return sum(r.nbytes for r in self.records if r.is_bridge)
 
     def charged_s(self) -> float:
         """Durations charged to the recording clock's critical path."""
@@ -187,10 +221,11 @@ class BridgeTape:
 
     def staging_seconds(self) -> dict[str, float]:
         """Recorded crossing seconds per staging kind ("fresh"/"registered");
-        compute records have no staging path and are excluded."""
+        compute and fabric-P2P records have no staging path and are
+        excluded."""
         out: dict[str, float] = {}
         for r in self.records:
-            if r.is_compute:
+            if not r.is_bridge:
                 continue
             out[r.staging] = out.get(r.staging, 0.0) + r.duration_s
         return out

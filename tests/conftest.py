@@ -1,3 +1,4 @@
+import gc
 import os
 import sys
 
@@ -16,6 +17,25 @@ from repro.trace.harness import GOLDEN
 GOLDEN_SEED = GOLDEN["seed"]
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jax_executables():
+    """Drop jax's jit/pjit caches after every test module.
+
+    Each compiled executable the suite accumulates holds live memory
+    mappings in the process; across the full suite that adds up to tens
+    of thousands of maps and eventually trips ``vm.max_map_count``
+    (65530 on stock kernels), at which point the *next* XLA compile
+    segfaults.  Modules share essentially no jit cache anyway (engines
+    jit per-instance closures), so per-module clearing costs nothing
+    but keeps the map count flat.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()
 
 
 @pytest.fixture
