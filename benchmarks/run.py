@@ -20,7 +20,7 @@ def main() -> None:
     from . import (bench_bridge, bench_serving, bench_loader, bench_offload,
                    bench_fabric, bench_roofline, bench_cluster, bench_replay,
                    bench_bridge_opt, bench_obs, bench_packed, bench_chaos,
-                   bench_tp)
+                   bench_tp, bench_quant)
     modules = [
         ("bridge (SS4.1-4.3)", bench_bridge),
         ("serving (SS5.1-5.5)", bench_serving),
@@ -38,6 +38,8 @@ def main() -> None:
         ("chaos (SS11 fault injection + recovery ladder)", bench_chaos),
         ("tp (SS12 fabric-P2P tensor parallelism + fallback repricing)",
          bench_tp),
+        ("quant (SS13 quantized bridge crossings + un-quantize replay)",
+         bench_quant),
     ]
     if args.only:
         modules = [(t, m) for t, m in modules if args.only in t]

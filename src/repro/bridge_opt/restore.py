@@ -49,6 +49,8 @@ def pipelined_h2d(gateway: "TransferGateway", payloads: Sequence[np.ndarray], *,
                   chunk_bytes: int,
                   op_class: str = oc.KV_RESTORE_PIPELINED,
                   tags: tuple = (),
+                  raw_total: int = 0,
+                  codec: str = "",
                   ) -> tuple[list[jax.Array], PipelinedRestoreResult]:
     """Move `payloads` host->device as chunked, double-buffered pool traffic.
 
@@ -56,6 +58,11 @@ def pipelined_h2d(gateway: "TransferGateway", payloads: Sequence[np.ndarray], *,
     later chunks overlap whatever the caller does next.  Chunk staging is
     REGISTERED by construction — the restore path owns a persistent pair of
     double buffers it cycles through.
+
+    Quantized restores (DESIGN.md §13) pass ``raw_total``/``codec``: the
+    payloads already hold *wire* bytes, and each chunk's record carries its
+    proportional share of the full-width total so the un-quantize replay can
+    reprice the stream chunk by chunk.
     """
     if chunk_bytes <= 0:
         raise ValueError(f"chunk_bytes must be positive, got {chunk_bytes}")
@@ -72,10 +79,20 @@ def pipelined_h2d(gateway: "TransferGateway", payloads: Sequence[np.ndarray], *,
 
     first_done = None
     last_done = t0
+    raw_left = max(0, int(raw_total))
+    wire_left = total
     for size in sizes:
+        # proportional raw share, remainder-exact: the last chunk absorbs
+        # rounding so per-chunk raw sums to raw_total
+        raw_chunk = (raw_left * size) // wire_left if raw_left else 0
+        if size == wire_left:
+            raw_chunk = raw_left
+        raw_left -= raw_chunk
+        wire_left -= size
         crossing = Crossing(size, Direction.H2D, StagingKind.REGISTERED)
         _, _, done = gateway.pooled_crossing(crossing, op_class=op_class,
-                                             tags=tags)
+                                             tags=tags, raw_bytes=raw_chunk,
+                                             codec=codec if raw_chunk else "")
         if first_done is None:
             first_done = done
         last_done = max(last_done, done)

@@ -130,6 +130,32 @@ class SecureContextBudget:
 # Pinned host memory: the second host-wide L4 resource the cluster plans
 # ---------------------------------------------------------------------------------
 
+#: pinned staging slot each secure channel context owns (bounce buffer the
+#: channel encrypts out of) — leased per context alongside the arena bytes
+CHANNEL_SLOT_BYTES = 1 << 20
+
+#: pinned flush buffer the small-crossing coalescer accumulates into when a
+#: replica opts in to coalesce_small_crossings
+COALESCER_FLUSH_BYTES = 32 << 10
+
+
+def replica_pinned_bytes(arena_bytes: int, n_contexts: int,
+                         coalescer_watermark_bytes: int = 0) -> int:
+    """Total pinned bytes one replica holds from the host pool.
+
+    Everything a replica pins draws from the same host-wide commodity: the
+    staging arena's slabs, one `CHANNEL_SLOT_BYTES` slot per leased secure
+    context, and the coalescer's flush buffer when small-crossing fusion is
+    on.  The cluster leases this sum — not just the arena — so a fleet that
+    widens its channel pools sees the pinned budget tighten accordingly.
+    """
+    if arena_bytes < 0 or n_contexts < 0 or coalescer_watermark_bytes < 0:
+        raise ValueError(
+            f"pinned components cannot be negative: arena={arena_bytes} "
+            f"contexts={n_contexts} coalescer={coalescer_watermark_bytes}")
+    return (int(arena_bytes) + int(n_contexts) * CHANNEL_SLOT_BYTES
+            + int(coalescer_watermark_bytes))
+
 
 @dataclass(frozen=True)
 class PinnedLease:

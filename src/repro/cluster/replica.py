@@ -46,7 +46,8 @@ from repro.trace import opclasses as oc
 from repro.trace.recorder import TraceRecorder
 from repro.trace.tape import BridgeTape
 
-from .budget import BudgetExhausted, ContextLease, PinnedLease
+from .budget import (COALESCER_FLUSH_BYTES, BudgetExhausted, ContextLease,
+                     PinnedLease, replica_pinned_bytes)
 
 MS = 1e-3
 
@@ -97,6 +98,12 @@ class ReplicaConfig:
     #: fuse sub-threshold crossings (off by default: the engine's sync
     #: batching already covers the per-step prep; opt in per deployment)
     coalesce_small_crossings: bool = False
+    # ---- quantized crossings (DESIGN.md §13) -----------------------------
+    #: KV codec for spill/restore crossings ("" = full-width bf16 payloads)
+    kv_quant: str = ""
+    #: max per-block relative round-trip error a codec may exhibit; spawn
+    #: fails (AccuracyBudgetError) if the named codec measures worse
+    accuracy_budget: float = 0.05
 
     @property
     def block_bytes(self) -> int:
@@ -105,6 +112,13 @@ class ReplicaConfig:
     @property
     def effective_restore_chunk_bytes(self) -> int:
         return self.restore_chunk_bytes or 2 * self.block_bytes
+
+    def pinned_bytes(self, n_contexts: int) -> int:
+        """Pinned host bytes this replica needs leased: arena slabs plus the
+        channel pool's per-context slots plus the coalescer flush buffer."""
+        return replica_pinned_bytes(
+            self.staging_arena_bytes, n_contexts,
+            COALESCER_FLUSH_BYTES if self.coalesce_small_crossings else 0)
 
 
 @dataclass
@@ -171,17 +185,28 @@ class Replica:
                 f"replica {replica_id}: tp_degree={self.cfg.tp_degree} does "
                 f"not fit tenant {tenant.tenant_id!r}'s "
                 f"{tenant.partition.size}-device partition")
-        if pinned_lease is not None \
-                and pinned_lease.nbytes < self.cfg.staging_arena_bytes:
-            raise ValueError(
-                f"pinned lease {pinned_lease.nbytes} B cannot cover "
-                f"staging_arena_bytes={self.cfg.staging_arena_bytes}")
+        if pinned_lease is not None:
+            # the lease must cover everything the replica pins, not just the
+            # arena: each leased secure context owns a pinned staging slot,
+            # and the coalescer's flush buffer is pinned too (§4 L4 — the
+            # host pool is one commodity; slots unaccounted for here would
+            # be pinned bytes the fleet planner never saw)
+            need = self.cfg.pinned_bytes(lease.n_contexts)
+            if pinned_lease.nbytes < need:
+                raise ValueError(
+                    f"pinned lease {pinned_lease.nbytes} B cannot cover the "
+                    f"replica's pinned footprint {need} B (arena "
+                    f"{self.cfg.staging_arena_bytes} B + "
+                    f"{lease.n_contexts} channel slots"
+                    f"{' + coalescer flush buffer' if self.cfg.coalesce_small_crossings else ''})")
         self.clock = VirtualClock()
         defaults = dataclasses.replace(
             cc_aware_defaults(bridge.cc_on, concurrency=self.cfg.max_batch),
             staging_arena_bytes=self.cfg.staging_arena_bytes,
             pipelined_restore=self.cfg.pipelined_restore,
-            coalesce_small_crossings=self.cfg.coalesce_small_crossings)
+            coalesce_small_crossings=self.cfg.coalesce_small_crossings,
+            kv_quant=self.cfg.kv_quant,
+            accuracy_budget=self.cfg.accuracy_budget)
         self.arena = (StagingArena(self.cfg.staging_arena_bytes)
                       if self.cfg.staging_arena_bytes else None)
         self.gateway = TransferGateway(
@@ -234,7 +259,10 @@ class Replica:
             coalescer=self.engine.coalescer,
             pipelined_restore=defaults.pipelined_restore,
             restore_chunk_bytes=self.cfg.effective_restore_chunk_bytes,
-            obs=self.obs)
+            obs=self.obs,
+            kv_quant=defaults.kv_quant,
+            accuracy_budget=defaults.accuracy_budget,
+            compute_model=compute_model)
         # restore completions flow to the engine's slot-granular read sets
         # (OverlapScheduler) through the offload layer's own callback — the
         # admission path no longer hand-plumbs done_t per call site
@@ -475,6 +503,19 @@ class Replica:
             self.context_budget.release(self.lease.holder)
         if self.pinned_budget is not None and self.pinned_lease is not None:
             self.pinned_budget.release(self.pinned_lease.holder)
+        # leak audit: after release, neither budget may still show a lease
+        # under this replica's holders — a stale entry is exactly the §4 L4
+        # leak that starves replacement spawns, so it fails loudly here
+        if self.context_budget is not None \
+                and self.lease.holder in self.context_budget.leases():
+            raise RuntimeError(
+                f"replica {self.replica_id}: context lease "
+                f"{self.lease.holder!r} still held after close()")
+        if self.pinned_budget is not None and self.pinned_lease is not None \
+                and self.pinned_lease.holder in self.pinned_budget.leases():
+            raise RuntimeError(
+                f"replica {self.replica_id}: pinned lease "
+                f"{self.pinned_lease.holder!r} still held after close()")
 
     def tape(self) -> BridgeTape:
         """This replica's crossing trace (replayable, conformance-checkable)."""

@@ -324,9 +324,11 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
     behind a routing front end.
 
     `host_pinned_bytes` declares the host's pinned-memory budget: each
-    replica's `staging_arena_bytes` is leased from it at spawn, and a fleet
-    whose arenas over-subscribe the pool fails *here* (BudgetExhausted)
-    instead of degrading at runtime.  None = unconstrained (legacy).
+    replica's full pinned footprint (`ReplicaConfig.pinned_bytes` — arena
+    slabs + per-context channel slots + coalescer flush buffer) is leased
+    from it at spawn, and a fleet that over-subscribes the pool fails *here*
+    (BudgetExhausted) instead of degrading at runtime.  None = unconstrained
+    (legacy).
 
     `fault_plan` arms seeded fault injection (DESIGN.md §11) on every
     replica; replica i draws from an independent stream at
@@ -352,7 +354,11 @@ def build_cluster(model, *, profile: BridgeProfile = TPU_V5E,
         tenant = tm.provision(f"tenant-{i}", partition_size,
                               require_attestation=require_attestation)
         lease = budget.acquire(f"replica-{i}", grants[i])
-        pinned_lease = pinned.acquire(f"replica-{i}", cfg.staging_arena_bytes)
+        # lease the replica's FULL pinned footprint: arena slabs plus the
+        # granted contexts' channel slots plus the coalescer flush buffer —
+        # the channel pool pins host memory just like the arena does
+        pinned_lease = pinned.acquire(f"replica-{i}",
+                                      cfg.pinned_bytes(lease.n_contexts))
         bridge = BridgeModel(profile, cc_on=cc_on)
         plan_i = (dataclasses.replace(fault_plan, seed=fault_plan.seed + i)
                   if fault_plan is not None else None)

@@ -55,6 +55,14 @@ class CopyRecord:
     #: counterfactually (stall attribution, replay).  Empty for ordinary
     #: crossings; additive with default, so hand-built records stay valid.
     sources: tuple = ()
+    #: quantized crossings (DESIGN.md §13): the full-width byte count the
+    #: payload represents.  `nbytes` is what crossed the wire; `raw_bytes`
+    #: is what it widens back to on device.  0 = not quantized (every
+    #: pre-quant record), and the conformance Q-law demands
+    #: 0 < nbytes <= raw_bytes whenever it is set.
+    raw_bytes: int = 0
+    #: codec id ("fp8" | "int8") for quantized crossings; "" otherwise
+    codec: str = ""
 
 
 @dataclass

@@ -108,7 +108,8 @@ class ComputeModel:
     """
 
     def __init__(self, cfg: ModelConfig, bridge: BridgeModel, *,
-                 spec: Optional[ComputeSpec] = None, tp_degree: int = 1):
+                 spec: Optional[ComputeSpec] = None, tp_degree: int = 1,
+                 skew: Optional[Sequence[float]] = None):
         if tp_degree < 1:
             raise ValueError(f"tp_degree must be >= 1, got {tp_degree}")
         self.cfg = cfg
@@ -124,6 +125,22 @@ class ComputeModel:
         #: ``allreduce_seconds`` and charged by the engine as a
         #: ``p2p_allreduce`` record, never folded into the compute interval.
         self.tp_degree = int(tp_degree)
+        #: per-device clock skew within the TP group, seconds (one entry per
+        #: device).  A ring collective completes when its slowest member
+        #: arrives, so each step's allreduce waits out the skew *spread*
+        #: (max - min) on top of the bandwidth term — stragglers become
+        #: priceable instead of invisible.  None/zero vector = no skew, and
+        #: the surcharge is exactly 0.0, so skew-free tapes (all goldens)
+        #: are unchanged.
+        if skew is not None:
+            skew = tuple(float(s) for s in skew)
+            if len(skew) != self.tp_degree:
+                raise ValueError(
+                    f"skew vector has {len(skew)} entries for "
+                    f"tp_degree={self.tp_degree}")
+            if any(s < 0 for s in skew):
+                raise ValueError(f"skew entries must be >= 0, got {skew}")
+        self.skew = skew
 
     # -- per-token byte/flop terms ------------------------------------------------------
 
@@ -243,12 +260,43 @@ class ComputeModel:
         payload = 2 * self.cfg.n_layers * batch * self.cfg.d_model * self.bytes_per_param
         return int(2 * (self.tp_degree - 1) / self.tp_degree * payload)
 
+    def allreduce_skew_s(self) -> float:
+        """Straggler wait of one ring collective: the skew *spread* (max -
+        min) across the TP group — the fastest device idles until the
+        slowest arrives.  0.0 without a skew vector or below tp=2."""
+        if not self.skew or self.tp_degree == 1:
+            return 0.0
+        return max(self.skew) - min(self.skew)
+
     def allreduce_seconds(self, batch: int, p2p_bw: float) -> float:
-        """One step's allreduce time over the tenant fabric at ``p2p_bw``."""
+        """One step's allreduce time over the tenant fabric at ``p2p_bw``,
+        plus the straggler wait when a skew vector is set."""
         nbytes = self.allreduce_bytes(batch)
         if nbytes == 0:
             return 0.0
-        return nbytes / p2p_bw
+        return nbytes / p2p_bw + self.allreduce_skew_s()
+
+    # -- dequantization (quantized crossings; DESIGN.md §13) ----------------------------
+
+    def dequant_charge(self, raw_bytes: int, wire_bytes: int) -> ComputeCharge:
+        """On-device widening of a quantized payload after a wire-priced
+        restore (the ``kernels/dequant`` pass): read the codes + scales
+        (``wire_bytes``), write full width (``raw_bytes``), ~2 flops per
+        emitted value (decode + scale multiply).  Memory-bound by
+        construction — its arithmetic intensity is ~2 flops per 3 bytes —
+        which is the point: the bytes the bridge didn't move are paid for
+        in HBM stream time, never hidden.  Zero raw bytes charge nothing
+        (the phantom-charge rule)."""
+        raw = max(0, int(raw_bytes))
+        wire = max(0, int(wire_bytes))
+        if raw == 0:
+            return ComputeCharge("dequant", 0.0, 0.0, 0.0, "compute")
+        flops = 2.0 * wire  # one code byte per value
+        hbm = float(wire + raw)
+        return self._charge("dequant", flops, hbm)
+
+    def dequant_s(self, raw_bytes: int, wire_bytes: int) -> float:
+        return self.dequant_charge(raw_bytes, wire_bytes).seconds
 
     # -- the roofline -------------------------------------------------------------------
 

@@ -145,7 +145,9 @@ class TransferGateway:
         self._record(crossing, cost, op_class, t_end=end, tags=tags)
         return jax.device_put(arr, self.device)
 
-    def d2h(self, device_array: jax.Array, *, op_class: str = "d2h") -> np.ndarray:
+    def d2h(self, device_array: jax.Array, *, op_class: str = "d2h",
+            tags: tuple = (), raw_bytes: int = 0,
+            codec: str = "") -> np.ndarray:
         """One device-to-host crossing (the drain).  Blocking under CC (L2).
 
         Drain staging follows the same economics as uploads: with a
@@ -159,14 +161,15 @@ class TransferGateway:
         nbytes = _nbytes(device_array)
         if self.arena is not None:
             staging, tag = self.arena.acquire(nbytes)
-            tags: tuple[str, ...] = (tag,)
+            tags = tuple(tags) + (tag,)
         else:
-            staging, tags = StagingKind.REGISTERED, ()
+            staging = StagingKind.REGISTERED
         crossing = Crossing(nbytes, Direction.D2H, staging)
         cost = self.bridge.crossing_time(crossing, n_contexts=self.pool.n_workers)
         cost = self._faulted_cost(op_class, crossing, cost)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end, tags=tags)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags,
+                     raw_bytes=raw_bytes, codec=codec)
         return np.asarray(device_array)
 
     def batch_h2d(self, host_arrays: Sequence[np.ndarray], *,
@@ -202,26 +205,37 @@ class TransferGateway:
         return [jax.device_put(np.asarray(a), self.device) for a in host_arrays]
 
     def bulk_h2d_pooled(self, host_arrays: Sequence[np.ndarray], *,
-                        op_class: str = "bulk_h2d") -> list[jax.Array]:
-        """Bulk movement over the context pool (loader / KV restore path)."""
+                        op_class: str = "bulk_h2d", tags: tuple = (),
+                        raw_bytes: Optional[Sequence[int]] = None,
+                        codec: str = "") -> list[jax.Array]:
+        """Bulk movement over the context pool (loader / KV restore path).
+
+        ``raw_bytes`` (parallel to ``host_arrays``) marks quantized payloads:
+        the arrays already hold *wire* bytes — the pool prices what crosses —
+        while each record additionally carries the full-width byte count and
+        codec id for the un-quantize replay counterfactual (DESIGN.md §13).
+        """
         self.pool.ensure_ready()
         out = []
         before = self.clock.now
-        for a in host_arrays:
+        for i, a in enumerate(host_arrays):
             crossing = Crossing(_nbytes(a), Direction.H2D, StagingKind.REGISTERED)
             ctx_id, start, done = self.pool.submit_ex(crossing)
+            raw_i = raw_bytes[i] if raw_bytes else 0
             # per-crossing record carries its single-channel duration; the
             # wall-clock charge comes from the drain below
             self._record(crossing, done - start, op_class, charge=False,
-                         channel=ctx_id, t_end=done)
+                         channel=ctx_id, t_end=done, tags=tags,
+                         raw_bytes=raw_i, codec=codec if raw_i else "")
             out.append(jax.device_put(np.asarray(a), self.device))
         self.pool.drain()
         self.stats.bridge_time_s += self.clock.now - before
         return out
 
     def pooled_crossing(self, crossing: Crossing, *, op_class: str,
-                        tags: tuple = (),
-                        sources: tuple = ()) -> tuple[int, float, float]:
+                        tags: tuple = (), sources: tuple = (),
+                        raw_bytes: int = 0,
+                        codec: str = "") -> tuple[int, float, float]:
         """Submit one crossing to the channel pool, recorded *uncharged*.
 
         Returns ``(ctx_id, start, done)``.  The caller owns the
@@ -232,13 +246,15 @@ class TransferGateway:
         """
         ctx_id, start, done = self.pool.submit_ex(crossing)
         self._record(crossing, done - start, op_class, charge=False,
-                     channel=ctx_id, t_end=done, tags=tags, sources=sources)
+                     channel=ctx_id, t_end=done, tags=tags, sources=sources,
+                     raw_bytes=raw_bytes, codec=codec)
         return ctx_id, start, done
 
     def charge_crossing(self, nbytes: int, direction: Direction, *,
                         staging: StagingKind = StagingKind.REGISTERED,
                         op_class: str, tags: tuple = (),
-                        sources: tuple = ()) -> float:
+                        sources: tuple = (), raw_bytes: int = 0,
+                        codec: str = "") -> float:
         """Price + record a metadata-only crossing (no tensor moves).
 
         Call sites that account a crossing without materializing its payload
@@ -254,13 +270,14 @@ class TransferGateway:
                                   n_units=max(1, len(sources)))
         end = self.clock.advance(cost)
         self._record(crossing, cost, op_class, t_end=end, tags=tags,
-                     sources=sources)
+                     sources=sources, raw_bytes=raw_bytes, codec=codec)
         return cost
 
     def record_modeled(self, nbytes: int, direction: Direction, cost: float, *,
                        op_class: str,
                        staging: StagingKind = StagingKind.REGISTERED,
-                       tags: tuple = ()) -> None:
+                       tags: tuple = (), raw_bytes: int = 0,
+                       codec: str = "") -> None:
         """Record a crossing whose cost an external model already computed.
 
         The pooled loader prices its ladder variants with its own calibrated
@@ -271,7 +288,8 @@ class TransferGateway:
         """
         crossing = Crossing(int(nbytes), direction, staging)
         end = self.clock.advance(cost)
-        self._record(crossing, cost, op_class, t_end=end, tags=tags)
+        self._record(crossing, cost, op_class, t_end=end, tags=tags,
+                     raw_bytes=raw_bytes, codec=codec)
 
     # -- device-local compute ----------------------------------------------------------
 
@@ -306,7 +324,8 @@ class TransferGateway:
 
     # -- in-tenant fabric P2P (DESIGN.md §12) --------------------------------------------
 
-    def p2p(self, nbytes: int, *, op_class: str, tags: tuple = ()) -> float:
+    def p2p(self, nbytes: int, *, op_class: str, tags: tuple = (),
+            extra_s: float = 0.0) -> float:
         """Charge an in-tenant fabric-P2P transfer (never the bridge).
 
         P2P is the one data path CC does not serialize: no host staging, no
@@ -322,14 +341,21 @@ class TransferGateway:
         at the CC-compatible TCP fallback rate and tagged FABRIC_FALLBACK,
         so degradation shows up in the tape as a pricing step, not a hidden
         slowdown.
+
+        ``extra_s`` adds straggler time on top of the bandwidth term — the
+        per-device clock-skew spread a ring collective waits out
+        (``ComputeModel.allreduce_skew_s``).  Zero by default, so skew-free
+        tapes (all goldens) are byte-identical to before.
         """
         from .fabric import FabricTransport, p2p_bandwidth
         if nbytes < 0:
             raise ValueError(f"cannot move negative bytes {nbytes}")
+        if extra_s < 0:
+            raise ValueError(f"cannot add negative straggler time {extra_s}")
         transport = self.fabric or FabricTransport(self.bridge.profile)
         up = transport.fabric_up()
         bw = p2p_bandwidth(self.bridge.profile, fabric_up=up)
-        cost = nbytes / bw if nbytes else 0.0
+        cost = (nbytes / bw if nbytes else 0.0) + extra_s
         if not up:
             tags = tuple(tags) + ("fabric_fallback",)
             self.stats.p2p_fallback_crossings += 1
@@ -352,7 +378,8 @@ class TransferGateway:
     def _record(self, crossing: Crossing, cost: float, op_class: str, *,
                 charge: bool = True, channel: int = -1,
                 t_end: Optional[float] = None, tags: tuple = (),
-                sources: tuple = ()) -> None:
+                sources: tuple = (), raw_bytes: int = 0,
+                codec: str = "") -> None:
         """`charge=False` keeps the per-crossing duration in the records (for
         op-class attribution) without adding it to bridge_time_s — used when
         the wall-clock charge is accounted elsewhere (pooled drain).
@@ -374,7 +401,8 @@ class TransferGateway:
             op_class, crossing.nbytes, cost, self.bridge.cc_on,
             direction=crossing.direction.value, staging=crossing.staging.value,
             channel=channel, t_start=end - cost, t_end=end, charged=charge,
-            tags=tuple(tags), sources=tuple(sources))
+            tags=tuple(tags), sources=tuple(sources),
+            raw_bytes=int(raw_bytes), codec=codec)
         self.records.append(rec)
         for hook in self.on_record:
             hook(rec)

@@ -116,6 +116,17 @@ class RuntimeDefaults:
     #: handed one explicitly (metrics registry + request spans wired into
     #: the gateway's record stream).  Passive: never touches the clock.
     observability: bool = field(default_factory=observability_default)
+    # ---- quantized bridge crossings (DESIGN.md §13) -----------------------------
+    #: codec for KV offload/restore crossings ("fp8" | "int8"; "" = full
+    #: width).  Spills and restores move wire bytes; restore pays a
+    #: dequant compute charge (never bridge time).
+    kv_quant: str = ""
+    #: codec for weight shard uploads (the 34x load path at 1/2–1/4 bytes)
+    weight_quant: str = ""
+    #: max per-block relative round-trip error a selected codec may show on
+    #: the seeded probe — quant.select_codec refuses codecs above it (e.g.
+    #: 0.01 accepts int8, refuses fp8-e4m3)
+    accuracy_budget: float = 0.05
 
 
 def cc_aware_defaults(cc_on: bool, *, allow_worker_drain: bool = True,

@@ -1,0 +1,1 @@
+from .ops import dequant  # noqa: F401

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the block-scale dequant kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dequant import ROW_TILE, dequant_kernel
+from .ref import dequant_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "force_kernel"))
+def dequant(codes, scales, *, codec: str, force_kernel: bool = False):
+    """codes: (nblocks, BLOCK) uint8; scales: (nblocks,) or (nblocks, 1)
+    f32.  Returns (nblocks, BLOCK) f32 — decoded values times per-block
+    scale."""
+    nblocks, block = codes.shape
+    scales = scales.reshape(nblocks, 1).astype(jnp.float32)
+    if _on_tpu() or force_kernel:
+        pad = (-nblocks) % ROW_TILE
+        if pad:
+            codes = jnp.pad(codes, ((0, pad), (0, 0)))
+            scales = jnp.pad(scales, ((0, pad), (0, 0)))
+        out = dequant_kernel(codes, scales, codec=codec,
+                             interpret=not _on_tpu())
+        return out[:nblocks]
+    return dequant_ref(codes, scales, codec=codec)

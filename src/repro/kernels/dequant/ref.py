@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the block-scale dequant kernel.
+
+Same decode the numpy codecs use: int8 is a bitcast + widen, fp8-e4m3 is a
+256-entry LUT gather (bit-identical to ``quant.codecs._E4M3_LUT``, so the
+kernel, the oracle, and the host codec agree to the bit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.codecs import _E4M3_LUT
+
+
+def dequant_ref(codes: jax.Array, scales: jax.Array, *,
+                codec: str) -> jax.Array:
+    """codes: (nblocks, BLOCK) uint8; scales: (nblocks, 1) f32
+    -> (nblocks, BLOCK) f32."""
+    if codec == "int8":
+        vals = jax.lax.bitcast_convert_type(codes, jnp.int8) \
+            .astype(jnp.float32)
+    elif codec == "fp8":
+        vals = jnp.asarray(_E4M3_LUT)[codes]
+    else:
+        raise ValueError(f"unknown codec {codec!r}")
+    return vals * scales

@@ -34,7 +34,7 @@ from repro.core.bridge import BridgeModel, Crossing, Direction, StagingKind
 from repro.core.channels import SecureChannelPool, VirtualClock
 from repro.core.gateway import TransferGateway
 from repro.trace import opclasses as oc
-from .sharded_weights import ShardedCheckpoint
+from .sharded_weights import ShardedCheckpoint, _np_dtype
 
 GB = 1e9
 
@@ -72,10 +72,19 @@ class PooledLoader:
                  rates: Optional[LoaderRates] = None,
                  clock: Optional[VirtualClock] = None,
                  gateway: Optional[TransferGateway] = None,
-                 arena=None):
+                 arena=None,
+                 weight_quant: str = "", accuracy_budget: float = 0.05):
         self.bridge = bridge
         self.n_workers = n_workers
         self.rates = rates or LoaderRates()
+        #: weight-only quantization (DESIGN.md §13): shards cross at wire
+        #: width (1/2–1/4 of the 34x path's bytes), the widening is a
+        #: dequant compute term, and the codec must clear the accuracy
+        #: budget or construction refuses
+        self.weight_codec = None
+        if weight_quant:
+            from repro.quant import select_codec
+            self.weight_codec = select_codec(weight_quant, accuracy_budget)
         #: optional: when set, per-shard transfer crossings are recorded
         #: through the gateway (so loads appear on the bridge tape) and the
         #: loader shares its virtual clock
@@ -166,6 +175,21 @@ class PooledLoader:
         comp["total"] = sum(comp.values())
         return comp
 
+    # -- weight-only quantization (DESIGN.md §13) ---------------------------------------------
+
+    def shard_wire_bytes(self, ckpt: ShardedCheckpoint, shard: int) -> int:
+        """Wire size of one shard under the weight codec: per tensor, one
+        byte per value plus per-block scales (quant.wire_bytes), summed —
+        the dtype-aware 1/2 (bf16) to 1/4 (f32) of the raw shard."""
+        from repro.quant import wire_bytes as quant_wire
+        wire = 0
+        for name in ckpt.shard_tensors(shard):
+            meta = ckpt.index["tensors"][name]
+            dt = _np_dtype(meta["dtype"])
+            count = int(np.prod(meta["shape"])) if meta["shape"] else 1
+            wire += quant_wire(count * dt.itemsize, itemsize=dt.itemsize)
+        return wire
+
     # -- real load ---------------------------------------------------------------------------
 
     def load(self, ckpt: ShardedCheckpoint, variant: LoaderVariant,
@@ -187,20 +211,47 @@ class PooledLoader:
             raise ValueError(f"tp_degree must be >= 1, got {tp_degree}")
         device = device or jax.devices()[0]
         total = ckpt.total_bytes()
+        quantized = self.weight_codec is not None
+        # everything byte-rated — staging reads, bridge transfer, assembly,
+        # arena slabs — sees the *wire* width under weight-only quant; only
+        # the per-shard tolls (count-priced) and the dequant term don't
+        if quantized:
+            xfer_shards = [self.shard_wire_bytes(ckpt, s)
+                           for s in range(ckpt.n_shards)]
+        else:
+            xfer_shards = [ckpt.shard_bytes(s) for s in range(ckpt.n_shards)]
+        xfer_total = sum(xfer_shards)
         kinds = tags = None
         if self.arena is not None:
-            acq = [self.arena.acquire(ckpt.shard_bytes(s))
+            # satellite fix: slabs keyed by what actually stages (wire
+            # bytes), so quantized shards hit the smaller size classes
+            acq = [self.arena.acquire(xfer_shards[s])
                    for s in range(ckpt.n_shards)]
             kinds = [k for k, _ in acq]
             tags = [(t,) for _, t in acq]
-        breakdown = self.modeled_load_time(total, ckpt.n_shards, variant,
+        breakdown = self.modeled_load_time(xfer_total, ckpt.n_shards, variant,
                                            staging=kinds)
+        if quantized:
+            # widening wire -> full width on device: an HBM-bound stream
+            # (read codes+scales, write raw) priced at the platform roofline;
+            # profiles without a ComputeSpec charge nothing rather than
+            # guessing (the byte accounting stays exact either way)
+            try:
+                from repro.core.compute import spec_for_profile
+                hbm_bw = spec_for_profile(self.bridge.profile.name).hbm_bw
+                breakdown["dequant"] = self.bridge.hbm_time(
+                    total + xfer_total, hbm_bw)
+            except ValueError:
+                breakdown["dequant"] = 0.0
+            breakdown["total"] += breakdown["dequant"]
         # transfer + toll components are charged per shard through the
         # gateway when one is attached (same total, tape-visible crossings);
         # host-side components (stage/lifecycle/assemble) stay a lump charge
         per_shard = breakdown["transfer"] + breakdown["toll"]
         if self.gateway is not None:
-            self.clock.advance(breakdown["total"] - per_shard)
+            # dequant is charged below as a tape-visible compute record
+            self.clock.advance(breakdown["total"] - per_shard
+                               - breakdown.get("dequant", 0.0))
         else:
             self.clock.advance(breakdown["total"])
 
@@ -223,7 +274,9 @@ class PooledLoader:
                 # setup + alloc per shard without an arena; warm toll on
                 # arena hits), so replaying a loader tape under the identity
                 # counterfactual re-prices the same toll class
-                frac = shard_bytes / total if total else 1.0 / ckpt.n_shards
+                wire_i = xfer_shards[shard] if quantized else shard_bytes
+                frac = (wire_i / xfer_total if xfer_total
+                        else 1.0 / ckpt.n_shards)
                 p = self.bridge.profile
                 if kinds is None:
                     toll_i = breakdown["toll"] / ckpt.n_shards
@@ -234,17 +287,27 @@ class PooledLoader:
                               if staging_i is StagingKind.FRESH
                               else p.cc_registered_toll)
                 self.gateway.record_modeled(
-                    shard_bytes, Direction.H2D,
+                    wire_i, Direction.H2D,
                     breakdown["transfer"] * frac + toll_i,
-                    op_class=oc.LOADER_SHARD_H2D,
-                    staging=staging_i, tags=tags_i)
+                    op_class=(oc.WEIGHT_SHARD_Q if quantized
+                              else oc.LOADER_SHARD_H2D),
+                    staging=staging_i,
+                    tags=(tuple(tags_i) + (oc.QUANTIZED,) if quantized
+                          else tags_i),
+                    raw_bytes=shard_bytes if quantized else 0,
+                    codec=self.weight_codec.name if quantized else "")
+        if quantized and self.gateway is not None and breakdown["dequant"] > 0:
+            self.gateway.charge_compute(
+                breakdown["dequant"], op_class=oc.DEQUANT_COMPUTE,
+                tags=(oc.QUANTIZED,), bound="memory")
         if pool is not None:
             pool.teardown(async_=(variant is LoaderVariant.PREWARMED))
         if tp_degree > 1 and self.gateway is not None:
             # scatter each device's 1/tp slice from the ingress device over
             # the tenant fabric: (tp-1)/tp of the weights move as one
             # kind="p2p" exchange — no staging, no toll, no bridge bytes
-            exchange = int(total * (tp_degree - 1) / tp_degree)
+            # (wire-width slices under quant: each device widens its own)
+            exchange = int(xfer_total * (tp_degree - 1) / tp_degree)
             cost = self.gateway.p2p(exchange, op_class=oc.P2P_SHARD_EXCHANGE)
             breakdown["shard_exchange"] = cost
             breakdown["total"] += cost

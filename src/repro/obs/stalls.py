@@ -77,7 +77,8 @@ CAUSES = (CAUSE_FRESH, CAUSE_SERIAL, CAUSE_FLUSH, CAUSE_RESTORE,
           CAUSE_P2P, CAUSE_UNATTRIBUTED)
 
 #: uncharged traffic that means "a restore was in flight"
-_RESTORE_CLASSES = frozenset({oc.KV_RESTORE_H2D, oc.KV_RESTORE_PIPELINED})
+_RESTORE_CLASSES = frozenset({oc.KV_RESTORE_H2D, oc.KV_RESTORE_PIPELINED,
+                              oc.KV_RESTORE_Q})
 _COALESCED_CLASSES = frozenset({oc.COALESCED_H2D, oc.COALESCED_D2H})
 #: the coalescer stamps flush records with the trigger that fired them
 DEADLINE_FLUSH_TAG = "flush_deadline"

@@ -1,0 +1,21 @@
+"""Quantized bridge crossings (DESIGN.md §13).
+
+FP8-e4m3 / INT8 per-block-scale codecs for KV blocks and weight shards,
+with an accuracy-budget gate and exact wire-vs-raw byte accounting.  The
+bridge moves ``wire_bytes``; dequant-on-restore is a compute charge
+(``kernels/dequant`` + ``ComputeModel.dequant_charge``), never bridge time.
+"""
+
+from .codecs import (                                              # noqa: F401
+    BLOCK_VALUES,
+    SCALE_BYTES,
+    AccuracyBudgetError,
+    CODECS,
+    Fp8E4M3Codec,
+    Int8BlockScaleCodec,
+    QuantizedBlock,
+    encode_payload,
+    get_codec,
+    select_codec,
+    wire_bytes,
+)

@@ -445,7 +445,11 @@ class ServingEngine:
         nbytes = self.compute.allreduce_bytes(batch)
         if nbytes == 0:
             return
-        self.gateway.p2p(nbytes, op_class=oc.P2P_ALLREDUCE)
+        # per-device clock skew (DESIGN.md §13): the ring closes when the
+        # slowest device arrives, so the skew spread rides the p2p charge as
+        # extra seconds — zero skew (the default) prices exactly as before
+        self.gateway.p2p(nbytes, op_class=oc.P2P_ALLREDUCE,
+                         extra_s=self.compute.allreduce_skew_s())
         if self.coalescer is not None:
             self.coalescer.poll()   # the allreduce moved the clock
 

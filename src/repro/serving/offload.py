@@ -56,6 +56,15 @@ class OffloadStats:
     # ---- intra-CVM fabric migration (DESIGN.md §12) -----------------------
     migrated_blocks: int = 0
     migrated_bytes: int = 0
+    # ---- quantized crossings (DESIGN.md §13) ------------------------------
+    quantized_spills: int = 0
+    quantized_restores: int = 0
+    #: wire bytes quantized spills/restores actually moved (raw totals stay
+    #: in spilled_bytes/restored_bytes — the workload's full-width volume)
+    spilled_wire_bytes: int = 0
+    restored_wire_bytes: int = 0
+    #: dequant compute charged on restore (ComputeModel.dequant_charge)
+    dequant_s: float = 0.0
 
 
 @dataclass
@@ -65,6 +74,12 @@ class HostBlock:
     seen_count: int
     #: host-side copy of the KV payload (None when metadata-only accounting)
     payload: Optional[np.ndarray] = None
+    #: quantized spill (DESIGN.md §13): wire bytes the block crosses at
+    #: (0 = full width) and the codec that encoded it
+    wire_bytes: int = 0
+    codec: str = ""
+    #: the encoded payload (quant.QuantizedBlock) when one was materialized
+    qblock: Optional[object] = None
 
 
 class OffloadManager:
@@ -73,11 +88,26 @@ class OffloadManager:
                  coalescer: Optional[CrossingCoalescer] = None,
                  pipelined_restore: bool = False,
                  restore_chunk_bytes: int = 256 << 10,
+                 kv_quant: str = "", accuracy_budget: float = 0.05,
+                 compute_model=None,
                  obs=None):
         self.gateway = gateway
         self.policy = policy
         self.store_threshold = store_threshold
         self.block_bytes = block_bytes
+        #: quantized crossings (DESIGN.md §13): when a codec is named,
+        #: spills encode to wire bytes (what the bridge prices), restores
+        #: move wire bytes back and pay a dequant *compute* charge.  The
+        #: codec must clear the accuracy budget or construction refuses —
+        #: a serving stack must not silently run outside its error contract.
+        self.kv_codec = None
+        if kv_quant:
+            from repro.quant import select_codec
+            self.kv_codec = select_codec(kv_quant, accuracy_budget)
+        #: core.compute.ComputeModel pricing dequant-on-restore; without one
+        #: the widening is unpriced (byte accounting still exact) — engine-
+        #: embedded managers always get the engine's model
+        self.compute_model = compute_model
         #: optional repro.obs.Observatory — spill/restore volumes and restore
         #: landing latencies land in its registry when attached
         self.obs = obs
@@ -146,7 +176,36 @@ class OffloadManager:
         if not self.should_spill(token_hash):
             self.stats.skipped_blocks += 1
             return False
-        if payload is not None:
+        qb = None
+        wire = 0
+        if self.kv_codec is not None:
+            from repro.quant import encode_payload
+            qb = encode_payload(self.kv_codec,
+                                payload if payload is not None else nbytes)
+            wire = qb.wire_bytes
+        if qb is not None:
+            # quantized spill: the bridge prices the *wire* bytes; the
+            # staging slab is wire-sized too (gateway.d2h routes the
+            # wire buffer through the arena, so size-class lookup keys on
+            # what actually stages — not the raw tensor)
+            wire_buf = np.zeros(wire, np.uint8)
+            n = min(qb.codes.size, wire)
+            wire_buf[:n] = qb.codes.reshape(-1)[:n]
+            if self.coalescer is not None and payload is None:
+                # sub-threshold metadata spills amortize into the fused
+                # flush — at wire size, so quantization makes them *more*
+                # fusable (the fused record keeps no per-part quant fields;
+                # the fusion erases part identity by design)
+                self.coalescer.charge(wire, Direction.D2H,
+                                      op_class=oc.KV_SPILL_D2H)
+            else:
+                self.gateway.d2h(wire_buf, op_class=oc.KV_SPILL_D2H,
+                                 tags=(oc.QUANTIZED,),
+                                 raw_bytes=qb.raw_bytes,
+                                 codec=qb.codec)
+            self.stats.quantized_spills += 1
+            self.stats.spilled_wire_bytes += wire
+        elif payload is not None:
             self.gateway.d2h(payload, op_class=oc.KV_SPILL_D2H)
         elif self.coalescer is not None:
             # sub-threshold metadata spills amortize into the fused flush
@@ -158,7 +217,8 @@ class OffloadManager:
             self.gateway.charge_crossing(nbytes, Direction.D2H,
                                          op_class=oc.KV_SPILL_D2H)
         self.host_store[token_hash] = HostBlock(
-            token_hash, nbytes, self.seen_counts.get(token_hash, 0), payload)
+            token_hash, nbytes, self.seen_counts.get(token_hash, 0), payload,
+            wire_bytes=wire, codec=qb.codec if qb else "", qblock=qb)
         self.stats.spilled_blocks += 1
         self.stats.spilled_bytes += nbytes
         if self.obs is not None:
@@ -189,8 +249,23 @@ class OffloadManager:
         faults = getattr(self.gateway, "faults", None)
         ladder = faults.ladder if faults is not None else None
         if hits:
-            payloads = [b.payload if b.payload is not None
-                        else np.zeros(b.payload_bytes, np.uint8) for b in hits]
+            quantized = any(b.codec for b in hits)
+            if quantized:
+                # quantized restore (DESIGN.md §13): the bridge moves each
+                # block's *wire* bytes; the raw width rides on the record
+                # for the un-quantize replay counterfactual, and the
+                # widening itself is charged as dequant compute below
+                payloads = [np.zeros(b.wire_bytes or b.payload_bytes,
+                                     np.uint8) for b in hits]
+                raw_list = [b.payload_bytes if b.codec else 0 for b in hits]
+                codec = next(b.codec for b in hits if b.codec)
+                wire_total = sum(p.nbytes for p in payloads)
+            else:
+                payloads = [b.payload if b.payload is not None
+                            else np.zeros(b.payload_bytes, np.uint8)
+                            for b in hits]
+                raw_list, codec = None, ""
+                wire_total = total
             sync_forced = ladder is not None and ladder.sync_restore_forced
             use_pipelined = (self.pipelined_restore
                              and self.gateway.pool.n_workers >= 2
@@ -198,7 +273,10 @@ class OffloadManager:
             if use_pipelined:
                 _, result = pipelined_h2d(
                     self.gateway, payloads,
-                    chunk_bytes=max(1, self.restore_chunk_bytes))
+                    chunk_bytes=max(1, self.restore_chunk_bytes),
+                    tags=(oc.QUANTIZED,) if quantized else (),
+                    raw_total=total if quantized else 0,
+                    codec=codec)
                 self.stats.pipelined_restores += 1
                 self.stats.restore_fill_s += result.fill_s
                 self.stats.restore_overlap_s += result.overlap_s
@@ -206,9 +284,25 @@ class OffloadManager:
             else:
                 if self.pipelined_restore and sync_forced:
                     self.stats.sync_restores_forced += 1
-                self.gateway.bulk_h2d_pooled(payloads,
-                                             op_class=oc.KV_RESTORE_H2D)
+                self.gateway.bulk_h2d_pooled(
+                    payloads,
+                    op_class=oc.KV_RESTORE_Q if quantized
+                    else oc.KV_RESTORE_H2D,
+                    tags=(oc.QUANTIZED,) if quantized else (),
+                    raw_bytes=raw_list, codec=codec)
                 done_t = self.gateway.clock.now
+            if quantized:
+                self.stats.quantized_restores += 1
+                self.stats.restored_wire_bytes += wire_total
+                if self.compute_model is not None:
+                    # widening back to full width is device compute, engine-
+                    # serial (the kernels/dequant pass) — never bridge time
+                    dq = self.compute_model.dequant_charge(total, wire_total)
+                    self.gateway.charge_compute(
+                        dq.seconds, op_class=oc.DEQUANT_COMPUTE,
+                        tags=(oc.QUANTIZED,), bound=dq.bound)
+                    self.stats.dequant_s += dq.seconds
+                    done_t = max(done_t, self.gateway.clock.now)
             if faults is not None:
                 # integrity verify after the transfer lands.  The pipelined
                 # path MACs the whole prefix as one stream, so a reject
@@ -221,8 +315,14 @@ class OffloadManager:
                 # never strand a restore.
                 attempt = 0
                 while faults.restore_corrupted(attempt, key=key or ""):
-                    redo_bytes = (total if use_pipelined
-                                  else hits[attempt % len(hits)].payload_bytes)
+                    # redos re-send what actually crosses: wire bytes for a
+                    # quantized restore, full width otherwise
+                    if use_pipelined:
+                        redo_bytes = wire_total
+                    else:
+                        b = hits[attempt % len(hits)]
+                        redo_bytes = ((b.wire_bytes or b.payload_bytes)
+                                      if quantized else b.payload_bytes)
                     redo = self.gateway.charge_crossing(
                         redo_bytes, Direction.H2D,
                         op_class=oc.KV_RESTORE_H2D, tags=(oc.RETRY,))

@@ -33,6 +33,11 @@ bridge channel (channel is -1, direction "p2p", staging empty), and every
 P2P interval is floored by its bytes over the fabric rate (the fallback
 rate when tagged FABRIC_FALLBACK — a degraded tenant cannot record
 full-fabric timing).
+
+Quantized crossings (tape v5, DESIGN.md §13) carry their own law ("Q"):
+any crossing marked quantized — by class, QUANTIZED tag, or a nonzero
+raw_bytes — must record both byte counts with wire <= raw and name its
+codec, and the quantized op classes always carry the QUANTIZED tag.
 """
 
 from __future__ import annotations
@@ -201,6 +206,38 @@ def check_tape(tape: BridgeTape) -> ConformanceReport:
                           f"{r.duration_s:.3e}s — faster than the "
                           f"{'fallback' if FABRIC_FALLBACK in r.tags else 'fabric'} "
                           f"rate {bw:.3e} B/s allows"))
+
+    # -- Q: quantized crossings carry both byte counts, wire <= raw ---------------------
+    # Tape v5 (DESIGN.md §13): a quantized crossing — by class (QUANT_CLASSES),
+    # tag (QUANTIZED), or a nonzero raw_bytes field — must record the
+    # full-width count alongside the wire count it actually moved, never move
+    # more than full width, and name its codec.  The quantized classes also
+    # imply the tag, so attribution filters agree with class filters.
+    from .opclasses import QUANT_CLASSES, QUANTIZED
+    for i, r in enumerate(records):
+        if r.kind != "crossing":
+            continue
+        quantish = (r.op_class in QUANT_CLASSES or QUANTIZED in r.tags
+                    or r.raw_bytes > 0)
+        if not quantish:
+            continue
+        report.checks["Q"] = report.checks.get("Q", 0) + 1
+        if r.raw_bytes <= 0:
+            report.violations.append(Violation(
+                "Q", i, f"quantized {r.op_class} carries no full-width "
+                        f"raw_bytes (wire nbytes={r.nbytes})"))
+            continue
+        if not 0 < r.nbytes <= r.raw_bytes:
+            report.violations.append(Violation(
+                "Q", i, f"quantized {r.op_class} moved {r.nbytes} wire bytes "
+                        f"against {r.raw_bytes} raw bytes — a codec never "
+                        f"inflates a crossing"))
+        if not r.codec:
+            report.violations.append(Violation(
+                "Q", i, f"quantized {r.op_class} names no codec"))
+        if r.op_class in QUANT_CLASSES and QUANTIZED not in r.tags:
+            report.violations.append(Violation(
+                "Q", i, f"{r.op_class} record missing the {QUANTIZED!r} tag"))
 
     # -- L4: bounded contexts + CC time >= native time ----------------------------------
     channels = {r.channel for r in records if r.channel >= 0}

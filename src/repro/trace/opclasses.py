@@ -28,9 +28,18 @@ WORKER_DRAIN = "worker_drain"
 # -- KV offload (§6.2) ----------------------------------------------------------------
 KV_SPILL_D2H = "kv_spill_d2h"
 KV_RESTORE_H2D = "kv_restore_h2d"
+#: quantized KV restore (DESIGN.md §13): wire bytes crossed, raw bytes
+#: widened back by the dequant kernel on device.  A separate class from
+#: KV_RESTORE_H2D so attribution and replay never average wire-priced and
+#: full-width restores together.
+KV_RESTORE_Q = "kv_restore_q"
 
 # -- loader (§6.1) --------------------------------------------------------------------
 LOADER_SHARD_H2D = "loader_shard_h2d"
+#: weight-only-quant shard upload (DESIGN.md §13): the 34x load path at
+#: 1/2–1/4 the bytes; wire bytes cross, raw bytes carried for un-quantize
+#: replay
+WEIGHT_SHARD_Q = "weight_shard_q"
 
 # -- resilience (fault injection + recovery; DESIGN.md §11) ---------------------------
 #: secure-session teardown recovery: one context re-established, charged the
@@ -83,6 +92,11 @@ DECODE_PACKED = "decode_packed"
 #: prompt-processing compute at admission (cold tokens only — restored/warm
 #: prefix tokens skip the forward and therefore the charge)
 PREFILL_COMPUTE = "prefill_compute"
+#: on-device widening of a quantized payload after a wire-priced restore
+#: (kernels/dequant; priced by ComputeModel.dequant_charge).  The bytes the
+#: bridge *didn't* move are paid for here, as HBM-bound compute — never
+#: folded into the crossing's duration.
+DEQUANT_COMPUTE = "dequant_compute"
 
 #: record *tags* (additive tape metadata, not op classes): how the staging
 #: arena resolved a crossing's staging buffer
@@ -112,13 +126,23 @@ DEGRADED = "degraded"
 #: profile) when this kind="p2p" record was charged, so it was priced at the
 #: CC-compatible TCP fallback rate instead of `fabric_p2p_bw`.
 FABRIC_FALLBACK = "fabric_fallback"
+#: quantized-crossing tag (DESIGN.md §13): stamped on every record whose
+#: payload crossed in codec form (wire bytes < raw bytes) and on the
+#: DEQUANT_COMPUTE records that widen it back.  The conformance Q-law keys
+#: on it: a quantized *crossing* must carry raw_bytes > 0, a codec id, and
+#: wire <= raw.
+QUANTIZED = "quantized"
 #: recovery op classes (charged on the engine-serial path with zero-byte
 #: registered-h2d crossings so replay repricing stays total)
 RECOVERY_CLASSES = frozenset({CHAN_REESTABLISH, REATTEST})
 #: compute op classes (kind == "compute" records) — the canonical set for
 #: attribution and replay summaries that enumerate compute classes
 COMPUTE_CLASSES = frozenset({DECODE_COMPUTE, DECODE_MASKED, DECODE_PACKED,
-                             PREFILL_COMPUTE})
+                             PREFILL_COMPUTE, DEQUANT_COMPUTE})
+#: quantized crossing classes (kind == "crossing" records that moved wire
+#: bytes) — the conformance Q-law requires each to carry the QUANTIZED tag,
+#: raw_bytes > 0 and nbytes <= raw_bytes.
+QUANT_CLASSES = frozenset({KV_RESTORE_Q, WEIGHT_SHARD_Q})
 #: fabric-P2P op classes (kind == "p2p" records) — conformance enforces the
 #: bijection: every record with one of these classes has kind "p2p", and
 #: every kind-"p2p" record carries one of these classes on channel -1.

@@ -54,6 +54,15 @@ class ReplaySpec:
     #: record up or down — "what would this TP run cost if the tenant's
     #: fabric had been healthy / had lapsed the whole time"
     fabric_up: Optional[bool] = None
+    #: quantization lever (DESIGN.md §13): None replays as recorded; "" is
+    #: the *un-quantize* counterfactual — every quantized crossing
+    #: (raw_bytes > 0) re-prices at its full raw width and the modeled
+    #: dequant compute is dropped ("what would this run have cost without
+    #: the codec"); a codec name ("fp8"/"int8") force-quantizes the
+    #: quantizable full-width classes at that codec's wire ratio ("what
+    #: would the codec have saved") — optimistically, without adding the
+    #: dequant compute the engine would actually charge
+    quantize: Optional[str] = None
     label: str = ""
 
     def policy_value(self) -> str:
@@ -85,6 +94,10 @@ class RewrittenCrossing:
     #: (FABRIC_FALLBACK tag) — RewrittenCrossing drops tags, so the pricing
     #: decision is carried explicitly for the as-recorded replay
     fallback: bool = False
+    #: quantized crossings (tape v5): full-width byte count (`nbytes` is
+    #: then the wire count actually moved) and the codec that produced it
+    raw_bytes: int = 0
+    codec: str = ""
 
 
 def rewrite_for_policy(records: Sequence[TapeRecord],
@@ -124,7 +137,8 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
             out.append(RewrittenCrossing(r.op_class, r.direction, r.nbytes,
                                          r.staging, r.duration_s,
                                          kind=r.kind, bound=r.bound,
-                                         fallback=oc.FABRIC_FALLBACK in r.tags))
+                                         fallback=oc.FABRIC_FALLBACK in r.tags,
+                                         raw_bytes=r.raw_bytes, codec=r.codec))
             continue
         if policy in (SchedulingPolicy.SYNC_DRAIN.value,
                       SchedulingPolicy.WORKER_DRAIN.value):
@@ -137,7 +151,8 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
                 op = (oc.DRAIN_D2H if policy == SchedulingPolicy.SYNC_DRAIN.value
                       else oc.WORKER_DRAIN)
             out.append(RewrittenCrossing(op, r.direction, r.nbytes, r.staging,
-                                         r.duration_s))
+                                         r.duration_s,
+                                         raw_bytes=r.raw_bytes, codec=r.codec))
         elif policy == SchedulingPolicy.ASYNC_OVERLAP.value:
             coalesced = r.op_class in (oc.COALESCED_H2D, oc.COALESCED_D2H)
             if coalesced and r.sources:
@@ -164,10 +179,69 @@ def rewrite_for_policy(records: Sequence[TapeRecord],
             elif r.op_class in (oc.DRAIN_D2H, oc.WORKER_DRAIN):
                 op = oc.DRAIN_D2H_NONBLOCKING
             out.append(RewrittenCrossing(op, r.direction, r.nbytes, staging,
-                                         r.duration_s))
+                                         r.duration_s,
+                                         raw_bytes=r.raw_bytes, codec=r.codec))
         else:
             raise ValueError(f"unknown scheduling policy {policy!r}")
     flush()
+    return out
+
+
+#: full-width crossing classes a force-quantize counterfactual may shrink
+#: (the classes the engine's kv_quant / weight_quant knobs actually route)
+QUANTIZABLE = frozenset({oc.KV_RESTORE_H2D, oc.KV_RESTORE_PIPELINED,
+                         oc.KV_SPILL_D2H, oc.LOADER_SHARD_H2D})
+
+#: class mapping between the quantized and full-width spellings of a
+#: crossing (pipelined restores and spills keep their class either way —
+#: the QUANTIZED tag / raw_bytes field is what marks them on the tape)
+_UNQUANT_CLASS = {oc.KV_RESTORE_Q: oc.KV_RESTORE_H2D,
+                  oc.WEIGHT_SHARD_Q: oc.LOADER_SHARD_H2D}
+_QUANT_CLASS = {v: k for k, v in _UNQUANT_CLASS.items()}
+
+
+def rewrite_for_quant(stream: Sequence[RewrittenCrossing],
+                      lever: str) -> list[RewrittenCrossing]:
+    """Apply the quantization counterfactual to an already-rewritten stream.
+
+    ``lever == ""`` *un-quantizes*: every crossing recorded at wire width
+    (``raw_bytes > 0``) is re-priced at its full raw width under the
+    full-width op class, and ``dequant_compute`` records are dropped — the
+    counterfactual engine never decoded anything.  ``lever == "fp8"/"int8"``
+    *force-quantizes*: full-width crossings in the quantizable classes
+    shrink to that codec's wire width (per-block scale overhead included).
+    Force-quantize is optimistic by construction: it does not synthesize the
+    dequant compute the real engine would charge, so it bounds the codec's
+    best-case bridge saving from above.
+
+    Pure function of the stream: recorded_s is preserved untouched (the tape
+    stays the ground truth; only the counterfactual pricing inputs change).
+    """
+    out: list[RewrittenCrossing] = []
+    if lever == "":
+        for rc in stream:
+            if rc.kind == "compute" and rc.op_class == oc.DEQUANT_COMPUTE:
+                continue  # no codec, no decode step
+            if rc.kind == "crossing" and rc.raw_bytes > 0:
+                rc = replace(rc, op_class=_UNQUANT_CLASS.get(rc.op_class,
+                                                             rc.op_class),
+                             nbytes=rc.raw_bytes, raw_bytes=0, codec="")
+            out.append(rc)
+        return out
+    # force-quantize: validate the codec name and price at its wire ratio
+    from repro.quant import get_codec, wire_bytes as quant_wire
+    codec = get_codec(lever)
+    for rc in stream:
+        if (rc.kind == "crossing" and rc.raw_bytes == 0
+                and rc.op_class in QUANTIZABLE and rc.nbytes > 0):
+            # recorded full-width bytes were bf16-ish KV/weight payloads;
+            # model them at 2-byte elements (the repo's KV dtype) so the
+            # wire ratio matches what the engine's knob would produce
+            wire = quant_wire(rc.nbytes, itemsize=2)
+            rc = replace(rc, op_class=_QUANT_CLASS.get(rc.op_class,
+                                                       rc.op_class),
+                         nbytes=wire, raw_bytes=rc.nbytes, codec=codec.name)
+        out.append(rc)
     return out
 
 
@@ -254,8 +328,11 @@ class TraceReplayer:
             stream = [RewrittenCrossing(r.op_class, r.direction, r.nbytes,
                                         r.staging, r.duration_s, kind=r.kind,
                                         bound=r.bound,
-                                        fallback=oc.FABRIC_FALLBACK in r.tags)
+                                        fallback=oc.FABRIC_FALLBACK in r.tags,
+                                        raw_bytes=r.raw_bytes, codec=r.codec)
                       for r in self.tape.records]
+        if spec.quantize is not None:
+            stream = rewrite_for_quant(stream, spec.quantize)
 
         # compute re-prices at parity (L5: device-local work is ~unaffected
         # by CC): recorded = t_ideal / parity_rec, counterfactual =

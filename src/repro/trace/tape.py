@@ -40,6 +40,15 @@ channel is -1, and the record is priced at `fabric.p2p_bandwidth` (or the
 TCP fallback, tagged FABRIC_FALLBACK).  v1-v3 tapes parse unchanged; the
 writer stamps v4 because a stream whose byte totals include fabric traffic
 must not be summed as bridge bytes by a reader unaware of the kind.
+
+v5 (DESIGN.md §13): quantized crossings carry additive ``raw_bytes`` (the
+full-width byte count the payload widens back to on device) and ``codec``
+(the codec id) fields; ``nbytes`` remains what actually crossed the wire.
+v1-v4 tapes parse unchanged (both default to 0/"" = not quantized); the
+writer stamps v5 because on a quantized stream ``nbytes`` totals are *wire*
+bytes — a reader unaware of the distinction would misread them as the
+workload's full-width traffic and under-count the counterfactual
+un-quantized cost (conformance's Q-law enforces wire <= raw per record).
 """
 
 from __future__ import annotations
@@ -50,10 +59,11 @@ from typing import Iterable, Optional
 
 from repro.core.accounting import CopyRecord
 
-TAPE_FORMAT = "bridge-tape/v4"
+TAPE_FORMAT = "bridge-tape/v5"
 #: major versions this reader speaks (v1 = crossings only; v2 adds compute
-#: records; v3 adds coalesced-record sources; v4 adds fabric-P2P records)
-READABLE_VERSIONS = (1, 2, 3, 4)
+#: records; v3 adds coalesced-record sources; v4 adds fabric-P2P records;
+#: v5 adds quantized-crossing raw_bytes/codec)
+READABLE_VERSIONS = (1, 2, 3, 4, 5)
 
 #: record kinds
 KIND_CROSSING = "crossing"
@@ -93,6 +103,12 @@ class TapeRecord:
     #: stall attributor and replay un-fuse a coalesced stream
     #: counterfactually without guessing the pre-fusion shape.
     sources: tuple = ()
+    #: v5: full-width byte count of a quantized crossing (nbytes is the wire
+    #: size); 0 = not quantized.  Conformance demands 0 < nbytes <= raw_bytes
+    #: whenever set, and replay's un-quantize lever reprices at this width.
+    raw_bytes: int = 0
+    #: v5: codec id ("fp8" | "int8") of a quantized crossing; "" otherwise
+    codec: str = ""
 
     @property
     def duration_s(self) -> float:
@@ -117,7 +133,8 @@ class TapeRecord:
                    nbytes=rec.nbytes, staging=rec.staging, channel=rec.channel,
                    t_start=rec.t_start, t_end=rec.t_end, charged=rec.charged,
                    tags=tuple(rec.tags), kind=rec.kind, bound=rec.bound,
-                   sources=tuple(tuple(s) for s in rec.sources))
+                   sources=tuple(tuple(s) for s in rec.sources),
+                   raw_bytes=rec.raw_bytes, codec=rec.codec)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -132,7 +149,9 @@ class TapeRecord:
                    kind=d.get("kind", KIND_CROSSING),
                    bound=d.get("bound", ""),
                    sources=tuple((str(s[0]), int(s[1]))
-                                 for s in d.get("sources", ())))
+                                 for s in d.get("sources", ())),
+                   raw_bytes=int(d.get("raw_bytes", 0)),
+                   codec=d.get("codec", ""))
 
 
 @dataclass(frozen=True)
@@ -200,8 +219,16 @@ class BridgeTape:
         return sum(r.nbytes for r in self.records if r.is_p2p)
 
     def bridge_bytes(self) -> int:
-        """Bytes that actually crossed the serialized bridge."""
+        """Bytes that actually crossed the serialized bridge (wire bytes
+        for quantized crossings)."""
         return sum(r.nbytes for r in self.records if r.is_bridge)
+
+    def bridge_raw_bytes(self) -> int:
+        """Full-width bytes the bridge crossings represent: raw_bytes where
+        quantized, nbytes otherwise — the un-quantized counterfactual total
+        (v5; equals bridge_bytes() on any unquantized tape)."""
+        return sum((r.raw_bytes or r.nbytes)
+                   for r in self.records if r.is_bridge)
 
     def charged_s(self) -> float:
         """Durations charged to the recording clock's critical path."""

@@ -118,7 +118,8 @@ class TestLeakAudit:
         for i in range(3):
             tenant = tm.provision(f"t{i}", 2)
             lease = budget.acquire(f"rep{i}", 4)
-            please = pinned.acquire(f"rep{i}", cfg.staging_arena_bytes)
+            please = pinned.acquire(f"rep{i}",
+                                    cfg.pinned_bytes(lease.n_contexts))
             rep = Replica(f"rep{i}", tiny_model,
                           tenant, lease, BridgeModel(TPU_V5E, cc_on=True),
                           cfg, pinned_lease=please,

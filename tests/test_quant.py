@@ -1,0 +1,642 @@
+"""Quantized bridge crossings (DESIGN.md §13).
+
+The laws pinned here:
+
+  * codecs are honest: per-block-scale FP8/INT8 round-trips stay within the
+    measured error the accuracy budget gates on, and the wire-size formula
+    (1 byte/value + 4 bytes/block of scale) never exceeds full width;
+  * the accuracy budget is a contract: `select_codec` refuses a codec whose
+    measured round-trip error exceeds it (fp8 fails a 1% budget, int8 passes);
+  * the dequant kernel, its jnp oracle and the host codec decode agree to
+    the bit — the modeled dequant compute charge prices a real computation;
+  * quantized spills/restores move WIRE bytes on the bridge and carry both
+    byte counts + codec on tape v5 records (conformance law Q); dequant on
+    restore is charged as compute, never bridge time;
+  * weight-only shard loads cross at wire width (quant byte ratio > 1) under
+    the `weight_shard_q` class;
+  * replay's quantize lever is a faithful counterfactual: un-quantizing a
+    quantized tape re-prices it to the full-width stream, force-quantize is
+    its inverse on clean streams;
+  * per-device clock skew prices into the TP allreduce (zero skew = golden
+    tapes unchanged); and
+  * the host pinned budget leases a replica's FULL footprint (arena +
+    channel slots + coalescer flush buffer) with a leak audit at close().
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.bridge_opt import StagingArena
+from repro.core.bridge import B300, TPU_V5E, BridgeModel
+from repro.core.compute import ComputeModel
+from repro.core.gateway import TransferGateway
+from repro.core.policy import cc_aware_defaults
+from repro.kernels.dequant import dequant
+from repro.kernels.dequant.ref import dequant_ref
+from repro.quant import (AccuracyBudgetError, CODECS, encode_payload,
+                         get_codec, select_codec, wire_bytes)
+from repro.core.policy import OffloadPolicy
+from repro.serving.offload import OffloadManager
+from repro.trace import opclasses as oc
+from repro.trace.conformance import check_tape
+from repro.trace.recorder import TraceRecorder
+from repro.trace.replay import (ReplaySpec, RewrittenCrossing, TraceReplayer,
+                                rewrite_for_quant)
+from repro.trace.tape import BridgeTape, TapeMeta, TapeRecord
+
+BLOCK = 64 << 10
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.configs.base import all_configs, smoke_config
+    from repro.models.model import Model
+    return Model(smoke_config(all_configs()["olmo-1b"]))
+
+
+def _probe(n=4096, seed=0):
+    return np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------------
+# Codecs: round-trip accuracy, wire-size formula, budget gate
+# ---------------------------------------------------------------------------------
+
+
+class TestCodecs:
+    @pytest.mark.parametrize("name,max_err", [("int8", 0.005), ("fp8", 0.04)])
+    def test_round_trip_error_within_bound(self, name, max_err):
+        codec = get_codec(name)
+        x = _probe()
+        out = codec.decode(codec.encode(x))
+        amax = np.abs(x).max()
+        assert np.abs(out - x.reshape(out.shape)).max() / amax < max_err
+        assert codec.measured_error() < max_err
+
+    def test_int8_is_more_accurate_than_fp8(self):
+        assert (get_codec("int8").measured_error()
+                < get_codec("fp8").measured_error())
+
+    def test_wire_bytes_formula_and_clamp(self):
+        # bf16 block: 128 values -> 128 code bytes + 4 scale bytes
+        assert wire_bytes(256, itemsize=2) == 128 + 4
+        # f32 quarters (plus scale overhead)
+        assert wire_bytes(4096, itemsize=4) == 1024 + 8 * 4
+        # tiny buffers can never inflate past full width
+        for raw in (1, 2, 3, 5, 8, 17):
+            for itemsize in (1, 2, 4):
+                assert wire_bytes(raw, itemsize=itemsize) <= raw
+
+    def test_bf16_ratio_clears_the_issue_gate(self):
+        # the acceptance gate: fp8 restore <= 0.55x bf16 bridge bytes
+        assert wire_bytes(BLOCK, itemsize=2) / BLOCK <= 0.55
+
+    def test_accuracy_budget_refuses_fp8_accepts_int8(self):
+        with pytest.raises(AccuracyBudgetError):
+            select_codec("fp8", 0.01)
+        assert select_codec("int8", 0.01).name == "int8"
+        # the default 5% budget accepts both
+        for name in CODECS:
+            assert select_codec(name, 0.05) is not None
+
+    def test_unknown_codec_raises(self):
+        with pytest.raises(ValueError, match="unknown"):
+            get_codec("int4")
+        assert select_codec("", 0.05) is None
+
+    def test_encode_payload_opaque_paths(self):
+        codec = get_codec("fp8")
+        # bare int (metadata-only spill): modeled as bf16-width values
+        qb = encode_payload(codec, BLOCK)
+        assert qb.opaque and qb.raw_bytes == BLOCK
+        assert qb.wire_bytes == wire_bytes(BLOCK, itemsize=2)
+        # integer ndarray: opaque at its own itemsize
+        arr = np.arange(512, dtype=np.int32)
+        qb2 = encode_payload(codec, arr)
+        assert qb2.opaque and qb2.wire_bytes == wire_bytes(arr.nbytes, 4)
+        # float ndarray: the real numeric codec
+        qb3 = encode_payload(codec, _probe(256))
+        assert not qb3.opaque
+        assert qb3.wire_bytes <= qb3.raw_bytes
+
+
+# ---------------------------------------------------------------------------------
+# Dequant kernel: Pallas kernel == jnp oracle == host codec decode
+# ---------------------------------------------------------------------------------
+
+
+class TestDequantKernel:
+    @pytest.mark.parametrize("name", ["int8", "fp8"])
+    def test_kernel_matches_oracle_and_host_codec(self, name):
+        codec = get_codec(name)
+        qb = codec.encode(_probe(512))
+        codes = qb.codes.reshape(qb.scales.size, -1)
+        scales = qb.scales.astype(np.float32)
+        host = codec.decode(qb).reshape(codes.shape)
+        ref = np.asarray(dequant_ref(codes, scales.reshape(-1, 1),
+                                     codec=name))
+        kern = np.asarray(dequant(codes, scales, codec=name,
+                                  force_kernel=True))
+        np.testing.assert_array_equal(ref, host)
+        np.testing.assert_array_equal(kern, host)
+
+    def test_dequant_charge_is_memory_bound(self):
+        from repro.configs.base import get_config
+        bridge = BridgeModel(B300, cc_on=True)
+        cm = ComputeModel(get_config("qwen3p6-27b"), bridge)
+        charge = cm.dequant_charge(BLOCK, BLOCK // 2)
+        assert charge.seconds > 0
+        assert charge.bound == "memory"
+        assert cm.dequant_charge(0, 0).seconds == 0.0
+
+
+# ---------------------------------------------------------------------------------
+# Quantized KV offload: wire bytes on the bridge, dequant as compute
+# ---------------------------------------------------------------------------------
+
+
+def _mgr(kv_quant="", *, pipelined=False, pool_workers=1, compute_model=None,
+         bridge=None):
+    bridge = bridge or BridgeModel(TPU_V5E, cc_on=True)
+    defaults = cc_aware_defaults(True)
+    gw = TransferGateway(bridge, defaults, pool_workers=pool_workers)
+    rec = TraceRecorder(gw, policy="sync_drain", label="quant-test").attach()
+    mgr = OffloadManager(gw, OffloadPolicy.SPILL_ALL, block_bytes=BLOCK,
+                         pipelined_restore=pipelined,
+                         restore_chunk_bytes=BLOCK // 2,
+                         kv_quant=kv_quant, accuracy_budget=0.05,
+                         compute_model=compute_model)
+    return mgr, gw, rec
+
+
+class TestQuantizedOffload:
+    def test_quantized_restore_moves_fewer_bridge_bytes(self):
+        payload = _probe(BLOCK // 4)  # f32, BLOCK bytes
+        totals = {}
+        for quant in ("", "fp8"):
+            mgr, gw, rec = _mgr(quant)
+            for h in (1, 2):
+                mgr.evict(h, payload=payload)
+            hits, raw = mgr.restore([1, 2])
+            tape = rec.tape()
+            totals[quant] = tape.bridge_bytes()
+            assert hits == 2 and raw == 2 * payload.nbytes
+            assert check_tape(tape).ok
+        assert totals["fp8"] < totals[""]
+        # f32 payloads quarter (plus scale overhead)
+        assert totals["fp8"] / totals[""] < 0.3
+
+    def test_quantized_records_carry_raw_wire_codec_and_tag(self):
+        mgr, gw, rec = _mgr("int8")
+        mgr.evict(7, payload=_probe(BLOCK // 4))
+        mgr.restore([7])
+        tape = rec.tape()
+        spills = [r for r in tape.records if r.op_class == oc.KV_SPILL_D2H]
+        restores = [r for r in tape.records if r.op_class == oc.KV_RESTORE_Q]
+        assert spills and restores
+        for r in spills + restores:
+            assert r.raw_bytes == BLOCK
+            assert 0 < r.nbytes <= r.raw_bytes
+            assert r.codec == "int8"
+            assert oc.QUANTIZED in r.tags
+        # the tape's raw view re-widens; the wire view is what crossed
+        assert tape.bridge_raw_bytes() == 2 * BLOCK
+        assert tape.bridge_bytes() < tape.bridge_raw_bytes()
+
+    def test_dequant_charged_as_compute_not_bridge(self):
+        from repro.configs.base import get_config
+        bridge = BridgeModel(B300, cc_on=True)
+        cm = ComputeModel(get_config("qwen3p6-27b"), bridge)
+        mgr, gw, rec = _mgr("fp8", compute_model=cm, bridge=bridge)
+        mgr.evict(1, payload=_probe(BLOCK // 4))
+        bridge_before = gw.stats.bridge_time_s
+        mgr.restore([1])
+        tape = rec.tape()
+        dq = [r for r in tape.records if r.op_class == oc.DEQUANT_COMPUTE]
+        assert len(dq) == 1 and dq[0].is_compute
+        assert mgr.stats.dequant_s > 0
+        # dequant seconds are on the clock but not in bridge_time_s
+        assert dq[0].duration_s == pytest.approx(mgr.stats.dequant_s)
+        assert check_tape(tape).ok
+
+    def test_pipelined_quantized_chunks_conserve_raw_bytes(self):
+        mgr, gw, rec = _mgr("fp8", pipelined=True, pool_workers=4)
+        for h in (1, 2, 3):
+            mgr.evict(h, payload=_probe(BLOCK // 4))
+        hits, raw = mgr.restore([1, 2, 3], key="r0")
+        tape = rec.tape()
+        chunks = [r for r in tape.records
+                  if r.op_class == oc.KV_RESTORE_PIPELINED]
+        assert chunks, "pipelined restore must emit chunk records"
+        for r in chunks:
+            assert oc.QUANTIZED in r.tags
+            assert r.codec == "fp8"
+            assert 0 < r.nbytes <= r.raw_bytes
+        # per-chunk raw shares sum exactly to the full-width total
+        assert sum(r.raw_bytes for r in chunks) == raw == 3 * BLOCK
+        assert check_tape(tape).ok
+
+    def test_unquantized_path_is_byte_identical(self):
+        # knob off: no raw_bytes, no codec, no quantized classes anywhere
+        mgr, gw, rec = _mgr("")
+        mgr.evict(1, payload=_probe(BLOCK // 4))
+        mgr.restore([1])
+        tape = rec.tape()
+        assert all(r.raw_bytes == 0 and r.codec == "" for r in tape.records)
+        assert oc.KV_RESTORE_Q not in tape.op_class_mix()
+        assert tape.bridge_raw_bytes() == tape.bridge_bytes()
+
+    def test_offload_rejects_codec_over_budget(self):
+        gw = TransferGateway(BridgeModel(TPU_V5E, cc_on=True),
+                             cc_aware_defaults(True))
+        with pytest.raises(AccuracyBudgetError):
+            OffloadManager(gw, OffloadPolicy.SPILL_ALL,
+                           kv_quant="fp8", accuracy_budget=0.01)
+
+    def test_arena_size_class_keys_on_wire_bytes(self):
+        """Regression pin: quantized slabs stage at the WIRE size class.
+
+        A 96 KiB opaque payload quantizes to 50 688 wire bytes — size class
+        65 536, not the raw class 131 072.  Keying the arena on raw bytes
+        would pin slabs twice as large as what actually stages (and the
+        non-power-of-two size makes the distinction visible: a power-of-two
+        raw size can share its class with the wire size)."""
+        raw = 96 << 10
+        bridge = BridgeModel(TPU_V5E, cc_on=True)
+        defaults = cc_aware_defaults(True)
+        arena = StagingArena(1 << 20)
+        gw = TransferGateway(bridge, defaults, arena=arena)
+        mgr = OffloadManager(gw, OffloadPolicy.SPILL_ALL, block_bytes=raw,
+                             kv_quant="fp8", accuracy_budget=0.05)
+        mgr.evict(1, payload_bytes=raw)
+        wire = wire_bytes(raw, itemsize=2)
+        assert wire == 50688
+        assert arena.size_class(wire) == 65536
+        assert arena.size_class(raw) == 131072
+        assert arena.registered_classes() == [65536]
+        assert arena.stats.pinned_bytes == 65536
+
+
+# ---------------------------------------------------------------------------------
+# Weight-only quantized shard loads
+# ---------------------------------------------------------------------------------
+
+
+class TestQuantizedLoader:
+    def _load(self, tmp_path, weight_quant):
+        from repro.loader.pooled_loader import LoaderVariant, PooledLoader
+        from repro.loader.sharded_weights import (ShardedCheckpoint,
+                                                  save_sharded)
+        d = str(tmp_path / f"ckpt-{weight_quant or 'raw'}")
+        tensors = {f"w{i}": _probe(1024, seed=i).reshape(32, 32)
+                   for i in range(4)}
+        save_sharded(d, tensors, n_shards=2)
+        bridge = BridgeModel(TPU_V5E, cc_on=True)
+        gw = TransferGateway(bridge, cc_aware_defaults(True))
+        rec = TraceRecorder(gw, policy="sync_drain", label="ld").attach()
+        loader = PooledLoader(bridge, gateway=gw, weight_quant=weight_quant)
+        _, breakdown = loader.load(ShardedCheckpoint(d), LoaderVariant.POOLED)
+        return rec.tape(), breakdown
+
+    def test_quantized_load_ratio_above_one(self, tmp_path):
+        full, _ = self._load(tmp_path, "")
+        quant, breakdown = self._load(tmp_path, "int8")
+        assert check_tape(full).ok and check_tape(quant).ok
+        ratio = full.bridge_bytes() / quant.bridge_bytes()
+        assert ratio > 1.0
+        # f32 weights: int8 + per-block scales ~ 3.9x fewer bytes
+        assert ratio > 3.0
+        # the widening is priced: a dequant term in the breakdown and a
+        # tape-visible compute record
+        assert breakdown["dequant"] > 0
+        assert oc.DEQUANT_COMPUTE in quant.op_class_mix()
+
+    def test_shard_records_use_weight_shard_q_class(self, tmp_path):
+        quant, _ = self._load(tmp_path, "fp8")
+        shards = [r for r in quant.records
+                  if r.op_class == oc.WEIGHT_SHARD_Q]
+        assert shards
+        for r in shards:
+            assert oc.QUANTIZED in r.tags
+            assert 0 < r.nbytes <= r.raw_bytes
+            assert r.codec == "fp8"
+        assert oc.LOADER_SHARD_H2D not in quant.op_class_mix()
+
+    def test_loader_rejects_codec_over_budget(self):
+        from repro.loader.pooled_loader import PooledLoader
+        with pytest.raises(AccuracyBudgetError):
+            PooledLoader(BridgeModel(TPU_V5E, cc_on=True),
+                         weight_quant="fp8", accuracy_budget=0.01)
+
+
+# ---------------------------------------------------------------------------------
+# Conformance law Q
+# ---------------------------------------------------------------------------------
+
+
+def _tape(records):
+    return BridgeTape(meta=TapeMeta(profile=TPU_V5E.name, cc_on=False),
+                      records=records)
+
+
+def _qrec(**kw):
+    base = dict(op_class=oc.KV_RESTORE_Q, direction="h2d", nbytes=512,
+                staging="registered", channel=0, t_start=0.0, t_end=1.0,
+                tags=(oc.QUANTIZED,), raw_bytes=1024, codec="fp8")
+    base.update(kw)
+    return TapeRecord(**base)
+
+
+class TestConformanceQLaw:
+    def test_valid_quantized_record_passes(self):
+        report = check_tape(_tape([_qrec()]))
+        assert report.ok and report.checks["Q"] == 1
+
+    def test_wire_above_raw_fails(self):
+        report = check_tape(_tape([_qrec(nbytes=2048)]))
+        assert any(v.law == "Q" and "never inflates" in v.message
+                   for v in report.violations)
+
+    def test_quant_class_without_raw_bytes_fails(self):
+        report = check_tape(_tape([_qrec(raw_bytes=0)]))
+        assert any(v.law == "Q" and "raw_bytes" in v.message
+                   for v in report.violations)
+
+    def test_missing_codec_fails(self):
+        report = check_tape(_tape([_qrec(codec="")]))
+        assert any(v.law == "Q" and "codec" in v.message
+                   for v in report.violations)
+
+    def test_quant_class_requires_quantized_tag(self):
+        report = check_tape(_tape([_qrec(tags=())]))
+        assert any(v.law == "Q" and "tag" in v.message
+                   for v in report.violations)
+
+    def test_tagged_full_width_class_still_checked(self):
+        # a pipelined chunk is quantized by tag, not class
+        rec = _qrec(op_class=oc.KV_RESTORE_PIPELINED, raw_bytes=0)
+        report = check_tape(_tape([rec]))
+        assert any(v.law == "Q" for v in report.violations)
+
+    def test_unquantized_records_skip_the_law(self):
+        rec = _qrec(op_class=oc.KV_RESTORE_H2D, tags=(), raw_bytes=0,
+                    codec="")
+        report = check_tape(_tape([rec]))
+        assert report.ok and "Q" not in report.checks
+
+
+# ---------------------------------------------------------------------------------
+# Tape v5: additive fields, version gating
+# ---------------------------------------------------------------------------------
+
+
+class TestTapeV5:
+    def test_round_trip_preserves_quant_fields(self):
+        tape = _tape([_qrec()])
+        back = BridgeTape.from_dict(tape.to_dict())
+        assert back.records[0].raw_bytes == 1024
+        assert back.records[0].codec == "fp8"
+
+    def test_v4_dicts_parse_with_defaults(self):
+        d = _tape([_qrec(op_class=oc.KV_RESTORE_H2D, tags=(), raw_bytes=0,
+                         codec="")]).to_dict()
+        d["format"] = "bridge-tape/v4"
+        for r in d["records"]:
+            r.pop("raw_bytes"), r.pop("codec")
+        back = BridgeTape.from_dict(d)
+        assert back.records[0].raw_bytes == 0
+        assert back.records[0].codec == ""
+
+    def test_bridge_raw_bytes_widens_only_quantized(self):
+        full = _qrec(op_class=oc.KV_RESTORE_H2D, tags=(), raw_bytes=0,
+                     codec="", nbytes=256)
+        tape = _tape([_qrec(), full])
+        assert tape.bridge_bytes() == 512 + 256
+        assert tape.bridge_raw_bytes() == 1024 + 256
+
+
+# ---------------------------------------------------------------------------------
+# Replay: the quantize lever
+# ---------------------------------------------------------------------------------
+
+
+class TestReplayQuantLever:
+    def _quantized_run(self, quant):
+        mgr, gw, rec = _mgr(quant)
+        for h in (1, 2):
+            mgr.evict(h, payload_bytes=BLOCK)
+        mgr.restore([1, 2])
+        return rec.tape()
+
+    def test_unquantize_reprices_to_full_width(self):
+        full = self._quantized_run("")
+        quant = self._quantized_run("fp8")
+        assert quant.bridge_bytes() < full.bridge_bytes()
+        # un-quantize the quantized tape: priced exactly like the recorded
+        # full-width run (same stream, same widths, same pool)
+        unq = TraceReplayer(quant).reprice(ReplaySpec(quantize=""))
+        ref = TraceReplayer(full).reprice(ReplaySpec())
+        assert unq.total_replayed_s == pytest.approx(ref.total_replayed_s,
+                                                     rel=1e-9)
+        # and within 2% of the recorded wall time (the ISSUE gate)
+        assert unq.total_replayed_s == pytest.approx(
+            full.total_recorded_s(), rel=0.02)
+
+    def test_force_quantize_shrinks_the_full_width_tape(self):
+        full = self._quantized_run("")
+        fq = TraceReplayer(full).reprice(ReplaySpec(quantize="fp8"))
+        asrec = TraceReplayer(full).reprice(ReplaySpec())
+        assert fq.total_replayed_s < asrec.total_replayed_s
+        assert oc.KV_RESTORE_Q in {r.op_class for r in fq.rows}
+
+    def test_unquantize_drops_dequant_compute(self):
+        stream = [
+            RewrittenCrossing(oc.KV_RESTORE_Q, "h2d", 512, "registered",
+                              1e-3, raw_bytes=1024, codec="fp8"),
+            RewrittenCrossing(oc.DEQUANT_COMPUTE, "", 0, "", 1e-4,
+                              kind="compute", bound="memory"),
+        ]
+        out = rewrite_for_quant(stream, "")
+        assert len(out) == 1
+        assert out[0].op_class == oc.KV_RESTORE_H2D
+        assert out[0].nbytes == 1024
+        assert out[0].raw_bytes == 0 and out[0].codec == ""
+
+    def test_quantize_then_unquantize_is_identity_on_clean_streams(self):
+        stream = [
+            RewrittenCrossing(oc.KV_RESTORE_H2D, "h2d", BLOCK, "registered",
+                              1e-3),
+            RewrittenCrossing(oc.LOADER_SHARD_H2D, "h2d", BLOCK, "registered",
+                              2e-3),
+            RewrittenCrossing(oc.DRAIN_D2H, "d2h", 64, "fresh", 1e-5),
+            RewrittenCrossing(oc.DECODE_COMPUTE, "", 0, "", 1e-4,
+                              kind="compute", bound="compute"),
+        ]
+        for lever in ("fp8", "int8"):
+            back = rewrite_for_quant(rewrite_for_quant(stream, lever), "")
+            assert back == stream
+
+    def test_weight_shard_class_maps_both_ways(self):
+        stream = [RewrittenCrossing(oc.LOADER_SHARD_H2D, "h2d", BLOCK,
+                                    "registered", 1e-3)]
+        fq = rewrite_for_quant(stream, "int8")
+        assert fq[0].op_class == oc.WEIGHT_SHARD_Q
+        assert fq[0].nbytes == wire_bytes(BLOCK, itemsize=2)
+        assert rewrite_for_quant(fq, "") == stream
+
+    def test_unknown_lever_raises(self):
+        with pytest.raises(ValueError, match="unknown"):
+            rewrite_for_quant([], "int4")
+
+
+# ---------------------------------------------------------------------------------
+# Per-device clock skew in TP allreduce pricing
+# ---------------------------------------------------------------------------------
+
+
+class TestClockSkew:
+    def _cm(self, skew=None, tp=4):
+        from repro.configs.base import get_config
+        bridge = BridgeModel(B300, cc_on=True)
+        return ComputeModel(get_config("qwen3p6-27b"), bridge, tp_degree=tp,
+                            skew=skew)
+
+    def test_zero_skew_is_the_default(self):
+        cm = self._cm()
+        assert cm.allreduce_skew_s() == 0.0
+        skewed = self._cm(skew=(0.0, 0.0, 0.0, 0.0))
+        assert skewed.allreduce_seconds(8, 100e9) == pytest.approx(
+            cm.allreduce_seconds(8, 100e9))
+
+    def test_skew_spread_prices_into_allreduce(self):
+        flat = self._cm()
+        skewed = self._cm(skew=(0.0, 1e-4, 3e-5, 2e-4))
+        assert skewed.allreduce_skew_s() == pytest.approx(2e-4)
+        assert skewed.allreduce_seconds(8, 100e9) == pytest.approx(
+            flat.allreduce_seconds(8, 100e9) + 2e-4)
+
+    def test_skew_vector_validated(self):
+        with pytest.raises(ValueError, match="tp_degree"):
+            self._cm(skew=(0.0, 1e-4))          # wrong length
+        with pytest.raises(ValueError, match=">= 0"):
+            self._cm(skew=(0.0, -1e-5, 0.0, 0.0))
+
+    def test_gateway_p2p_extra_seconds(self):
+        bridge = BridgeModel(B300, cc_on=True)
+        gw = TransferGateway(bridge, cc_aware_defaults(True))
+        rec = TraceRecorder(gw, policy="sync_drain", label="skew").attach()
+        gw.p2p(1 << 20, op_class=oc.P2P_ALLREDUCE, extra_s=5e-4)
+        gw.p2p(1 << 20, op_class=oc.P2P_ALLREDUCE)
+        tape = rec.tape()
+        skewed, flat = tape.records
+        assert skewed.duration_s == pytest.approx(flat.duration_s + 5e-4)
+        with pytest.raises(ValueError, match="negative"):
+            gw.p2p(1, op_class=oc.P2P_ALLREDUCE, extra_s=-1.0)
+
+
+# ---------------------------------------------------------------------------------
+# Pinned budget: channel slots + coalescer buffers lease like arenas
+# ---------------------------------------------------------------------------------
+
+
+class TestPinnedFootprint:
+    def test_replica_pinned_bytes_formula(self):
+        from repro.cluster.budget import (CHANNEL_SLOT_BYTES,
+                                          COALESCER_FLUSH_BYTES,
+                                          replica_pinned_bytes)
+        assert replica_pinned_bytes(32 << 20, 8) == (32 << 20) + 8 * CHANNEL_SLOT_BYTES
+        assert replica_pinned_bytes(0, 0) == 0
+        assert (replica_pinned_bytes(1 << 20, 2, COALESCER_FLUSH_BYTES)
+                == (1 << 20) + 2 * CHANNEL_SLOT_BYTES + COALESCER_FLUSH_BYTES)
+        with pytest.raises(ValueError, match="negative"):
+            replica_pinned_bytes(-1, 0)
+
+    def test_replica_rejects_arena_only_lease(self, tiny_model):
+        from repro.cluster.budget import (PinnedBudget, SecureContextBudget)
+        from repro.cluster.replica import Replica, ReplicaConfig
+        from repro.cluster.tenant_manager import TenantManager
+        budget = SecureContextBudget(TPU_V5E, cc_on=True)
+        pinned = PinnedBudget(8 << 30)
+        tm = TenantManager(TPU_V5E, cc_on=True)
+        cfg = ReplicaConfig(max_batch=2, max_len=64)
+        tenant = tm.provision("t0", 2)
+        lease = budget.acquire("rep0", 4)
+        # an arena-sized lease no longer covers the channel-pool slots
+        short = pinned.acquire("rep0", cfg.staging_arena_bytes)
+        with pytest.raises(ValueError, match="channel slots"):
+            Replica("rep0", tiny_model, tenant, lease,
+                    BridgeModel(TPU_V5E, cc_on=True), cfg,
+                    pinned_lease=short)
+
+    def test_close_leak_audit_raises_on_sticky_budget(self, tiny_model):
+        from repro.cluster.budget import (PinnedBudget, SecureContextBudget)
+        from repro.cluster.replica import Replica, ReplicaConfig
+        from repro.cluster.tenant_manager import TenantManager
+
+        class StickyPinned(PinnedBudget):
+            def release(self, holder):   # a leaking budget implementation
+                pass
+
+        budget = SecureContextBudget(TPU_V5E, cc_on=True)
+        pinned = StickyPinned(8 << 30)
+        tm = TenantManager(TPU_V5E, cc_on=True)
+        cfg = ReplicaConfig(max_batch=2, max_len=64)
+        tenant = tm.provision("t0", 2)
+        lease = budget.acquire("rep0", 4)
+        pl = pinned.acquire("rep0", cfg.pinned_bytes(lease.n_contexts))
+        rep = Replica("rep0", tiny_model, tenant, lease,
+                      BridgeModel(TPU_V5E, cc_on=True), cfg,
+                      pinned_lease=pl, context_budget=budget,
+                      pinned_budget=pinned)
+        with pytest.raises(RuntimeError, match="still held after close"):
+            rep.close()
+
+
+# ---------------------------------------------------------------------------------
+# End-to-end: a quantized replica run stays lawful and token-identical
+# ---------------------------------------------------------------------------------
+
+
+class TestQuantizedEngineRun:
+    def test_kv_quant_preserves_tokens_and_conformance(self, tiny_model,
+                                                       deterministic_seed):
+        from repro.cluster.budget import SecureContextBudget
+        from repro.cluster.replica import Replica, ReplicaConfig
+        from repro.cluster.tenant_manager import TenantManager
+        from repro.serving.engine import Request
+        from repro.serving.sampler import SamplingParams
+
+        def run(kv_quant):
+            tm = TenantManager(TPU_V5E, cc_on=True)
+            budget = SecureContextBudget(TPU_V5E, cc_on=True)
+            cfg = ReplicaConfig(max_batch=2, max_len=64, store_threshold=1,
+                                kv_quant=kv_quant)
+            rep = Replica("r", tiny_model, tm.provision("t", 2),
+                          budget.acquire("r", 4),
+                          BridgeModel(TPU_V5E, cc_on=True), cfg,
+                          seed=deterministic_seed, context_budget=budget)
+            try:
+                for i in range(3):
+                    rep.submit(Request(
+                        f"q{i}", prompt=list(range(1, 17)),
+                        sampling=SamplingParams(max_new_tokens=4)))
+                    while rep.pending():
+                        rep.tick()
+                tokens = {r.request_id: list(r.output_tokens)
+                          for r in rep.engine.finished}
+                tape = rep.tape()
+            finally:
+                rep.close()
+            return tokens, tape
+
+        full_tokens, full_tape = run("")
+        q_tokens, q_tape = run("fp8")
+        # byte-accounting quantization never touches the token stream
+        assert q_tokens == full_tokens
+        assert check_tape(q_tape).ok
+        # the quantized run moved strictly fewer bridge bytes whenever any
+        # spill/restore traffic crossed at all
+        if q_tape.bridge_raw_bytes() != q_tape.bridge_bytes():
+            assert q_tape.bridge_bytes() < full_tape.bridge_bytes()

@@ -1,0 +1,162 @@
+"""Property-based invariants for quantized crossings (DESIGN.md §13).
+
+Three families, each a law the quant subsystem must hold over its whole
+input space rather than at hand-picked points:
+
+  * codec round-trip error stays within the accuracy budget the codec was
+    admitted under, for arbitrary finite float tensors;
+  * byte conservation: wire <= raw on every encode and on every tape record
+    a quantized offload run emits (conformance law Q, exercised generatively);
+  * replay's quantize lever is self-inverse: un-quantize o force-quantize is
+    the identity on full-width crossing streams.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import encode_payload, get_codec, select_codec, wire_bytes
+from repro.trace import opclasses as oc
+from repro.trace.replay import RewrittenCrossing, rewrite_for_quant
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+finite_f32 = st.floats(min_value=-1e6, max_value=1e6, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def float_tensors(draw):
+    n = draw(st.integers(min_value=1, max_value=600))
+    vals = draw(st.lists(finite_f32, min_size=n, max_size=n))
+    dtype = draw(st.sampled_from([np.float32, np.float64]))
+    return np.asarray(vals, dtype=dtype)
+
+
+class TestCodecRoundTrip:
+    @SETTINGS
+    @given(arr=float_tensors(), name=st.sampled_from(["int8", "fp8"]))
+    def test_round_trip_error_within_admitted_budget(self, arr, name):
+        # the default RuntimeDefaults budget; select_codec admitted the
+        # codec under it, so every block of every tensor must respect it
+        budget = 0.05
+        codec = select_codec(name, budget)
+        out = codec.decode(codec.encode(arr)).reshape(arr.shape)
+        amax = float(np.abs(arr).max())
+        if amax == 0.0:
+            np.testing.assert_array_equal(out, np.zeros_like(out))
+        else:
+            # per-block normalization bounds the error per block; the
+            # global amax bound is weaker, so it must hold a fortiori
+            assert float(np.abs(out - arr).max()) <= budget * amax * 1.0001
+
+    @SETTINGS
+    @given(arr=float_tensors(), name=st.sampled_from(["int8", "fp8"]))
+    def test_encode_conserves_bytes(self, arr, name):
+        qb = get_codec(name).encode(arr)
+        assert 0 < qb.wire_bytes <= qb.raw_bytes or qb.raw_bytes == 0
+        assert qb.raw_bytes == arr.nbytes
+        assert qb.wire_bytes == wire_bytes(arr.nbytes,
+                                           itemsize=arr.dtype.itemsize)
+
+    @SETTINGS
+    @given(raw=st.integers(min_value=0, max_value=1 << 24),
+           itemsize=st.sampled_from([1, 2, 4, 8]))
+    def test_wire_never_exceeds_raw(self, raw, itemsize):
+        assert wire_bytes(raw, itemsize=itemsize) <= max(raw, 0) or raw == 0
+        if raw > 0:
+            assert wire_bytes(raw, itemsize=itemsize) >= 1
+
+    @SETTINGS
+    @given(nbytes=st.integers(min_value=1, max_value=1 << 22),
+           name=st.sampled_from(["int8", "fp8"]))
+    def test_opaque_payloads_conserve_bytes(self, nbytes, name):
+        qb = encode_payload(get_codec(name), nbytes)
+        assert 0 < qb.wire_bytes <= qb.raw_bytes == nbytes
+
+
+class TestTapeConservation:
+    @SETTINGS
+    @given(blocks=st.lists(st.integers(min_value=1, max_value=1 << 20),
+                           min_size=1, max_size=8),
+           name=st.sampled_from(["int8", "fp8"]),
+           pipelined=st.booleans())
+    def test_quantized_offload_records_conserve_bytes(self, blocks, name,
+                                                      pipelined):
+        from repro.core.bridge import TPU_V5E, BridgeModel
+        from repro.core.gateway import TransferGateway
+        from repro.core.policy import OffloadPolicy, cc_aware_defaults
+        from repro.serving.offload import OffloadManager
+        from repro.trace.conformance import check_tape
+        from repro.trace.recorder import TraceRecorder
+
+        gw = TransferGateway(BridgeModel(TPU_V5E, cc_on=True),
+                             cc_aware_defaults(True), pool_workers=4)
+        rec = TraceRecorder(gw, policy="sync_drain", label="prop").attach()
+        mgr = OffloadManager(gw, OffloadPolicy.SPILL_ALL,
+                             pipelined_restore=pipelined,
+                             restore_chunk_bytes=32 << 10,
+                             kv_quant=name, accuracy_budget=0.05)
+        for i, nbytes in enumerate(blocks):
+            mgr.evict(i, payload_bytes=nbytes)
+        mgr.restore(list(range(len(blocks))), key="prop")
+        tape = rec.tape()
+        rec.detach()
+        assert check_tape(tape).ok
+        for r in tape.records:
+            if r.raw_bytes:
+                assert 0 < r.nbytes <= r.raw_bytes
+                assert r.codec == name
+        # wire total never exceeds the raw total, and widening recovers it
+        assert tape.bridge_bytes() <= tape.bridge_raw_bytes()
+
+
+crossing_streams = st.lists(
+    st.builds(
+        RewrittenCrossing,
+        op_class=st.sampled_from([oc.KV_RESTORE_H2D, oc.KV_RESTORE_PIPELINED,
+                                  oc.KV_SPILL_D2H, oc.LOADER_SHARD_H2D,
+                                  oc.DRAIN_D2H, oc.ALLOC_H2D]),
+        direction=st.just("h2d"),
+        nbytes=st.integers(min_value=0, max_value=1 << 24),
+        staging=st.just("registered"),
+        recorded_s=st.floats(min_value=0, max_value=1.0,
+                             allow_nan=False)),
+    max_size=12)
+
+
+class TestReplayLeverIdentity:
+    @SETTINGS
+    @given(stream=crossing_streams, name=st.sampled_from(["int8", "fp8"]))
+    def test_unquantize_inverts_force_quantize(self, stream, name):
+        assert rewrite_for_quant(rewrite_for_quant(stream, name), "") == stream
+
+    @SETTINGS
+    @given(stream=crossing_streams, name=st.sampled_from(["int8", "fp8"]))
+    def test_force_quantize_never_inflates(self, stream, name):
+        for before, after in zip(stream, rewrite_for_quant(stream, name)):
+            assert after.nbytes <= before.nbytes
+            if after.raw_bytes:
+                assert after.raw_bytes == before.nbytes
+
+    def test_identity_on_golden_tapes(self):
+        import glob
+        import os
+        from repro.trace.replay import TraceReplayer, ReplaySpec
+        from repro.trace.tape import BridgeTape
+
+        golden = sorted(glob.glob(os.path.join(
+            os.path.dirname(__file__), "golden", "*.json")))
+        assert golden, "golden tapes missing"
+        for path in golden:
+            with open(path) as f:
+                tape = BridgeTape.from_json(f.read())
+            replayer = TraceReplayer(tape)
+            asrec = replayer.reprice(ReplaySpec())
+            # golden tapes are unquantized: the un-quantize lever is a no-op
+            unq = replayer.reprice(ReplaySpec(quantize=""))
+            assert unq.total_replayed_s == pytest.approx(
+                asrec.total_replayed_s, rel=1e-12)

@@ -334,9 +334,12 @@ class TestPinnedBudget:
                                 host_pinned_bytes=64 << 20,
                                 seed=deterministic_seed)
         try:
-            assert cluster.pinned_budget.allocated() == 32 << 20
+            # each lease covers the FULL pinned footprint: 16 MiB arena +
+            # 8 granted contexts x 1 MiB channel slot = 24 MiB per replica
+            assert cluster.pinned_budget.allocated() == 48 << 20
             assert all(r.pinned_lease is not None
-                       and r.pinned_lease.nbytes == 16 << 20
+                       and r.pinned_lease.nbytes
+                       == r.cfg.pinned_bytes(r.lease.n_contexts) == 24 << 20
                        for r in cluster.replicas)
         finally:
             cluster.close()

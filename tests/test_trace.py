@@ -76,7 +76,7 @@ class TestTapeFormat:
     def test_unknown_version_is_refused(self):
         tape = BridgeTape(meta=TapeMeta(profile="tpu-v5e", cc_on=True))
         blob = tape.to_dict()
-        blob["format"] = "bridge-tape/v5"
+        blob["format"] = "bridge-tape/v6"
         with pytest.raises(TapeFormatError, match="regenerate"):
             BridgeTape.from_dict(blob)
         blob["format"] = "not-a-tape"
